@@ -1,0 +1,57 @@
+"""Collectives-API microbenchmark (the paper's lower-level interface, C7).
+
+Times the MLSL-style collectives data path end to end on the local device
+(allreduce in each wire precision, including the fuse/quantize/unfuse work
+that would wrap the wire ops on TPU), and emits the MODELED mesh-scale time
+for each wire format on the production pod (derived column) -- the analog of
+an OSU-style latency/bandwidth table for the library.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, time_fn
+from repro.core import collectives, hw
+
+
+def run():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    for n in (1 << 16, 1 << 21):
+        x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
+        for wire in collectives.WIRES:
+            fn = jax.jit(lambda v, wire=wire: jax.shard_map(
+                lambda u: collectives.allreduce(u, ("data",), wire=wire),
+                mesh=mesh, in_specs=P(), out_specs=P(),
+                axis_names={"data"}, check_vma=False)(v))
+            us = time_fn(fn, x)
+            nbytes = n * collectives.wire_bytes_per_elem(wire)
+            t_pod = hw.ring_allreduce_time(nbytes, 16, hw.ICI_LINK)
+            emit(f"collectives/allreduce/{wire}/n{n}", us,
+                 f"modeled_pod_ring_ms={t_pod*1e3:.3f};"
+                 f"wire_bytes={nbytes:.0f}")
+
+    # reduce_scatter / all_gather path (the int8 composition's two legs)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1 << 18,), jnp.float32)
+    for name, fn_ in (
+        ("reduce_scatter",
+         lambda u: collectives.reduce_scatter(u, ("data",))),
+        ("all_gather", lambda u: collectives.all_gather(u, ("data",))),
+    ):
+        f = jax.jit(lambda v, fn_=fn_: jax.shard_map(
+            fn_, mesh=mesh, in_specs=P(), out_specs=P(),
+            axis_names={"data"}, check_vma=False)(v))
+        us = time_fn(f, x)
+        emit(f"collectives/{name}/n{1 << 18}", us, "local_1rank_path")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

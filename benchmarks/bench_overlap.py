@@ -1,0 +1,74 @@
+"""Paper claims #4/#5 (C1-C4): the compute-to-communication ratio analysis
+and its consequences.
+
+  1. C2C ratio is proportional to mini-batch (motivates large-batch, C3) and
+     INDEPENDENT of kernel size / feature counts / stride for data-parallel
+     conv layers (the Das et al. analysis the paper builds on);
+  2. per-layer strategy table: what the DL Layer API picks (data / model /
+     hybrid + node-group size) for conv vs FC layers of the paper's CNNs and
+     for transformer blocks of the assigned archs (C2);
+  3. overlap benefit: blocking vs FIFO vs priority exposed-comm across the
+     batch sweep (C4).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+from repro.configs import cnn_tables
+from repro.core import c2c, hw, planner, simulator as sim
+
+
+def run():
+    # 1 -- proportionality + invariance
+    base = c2c.conv_layer("conv", 256, 256, 3, 14, 14)
+    for b in (16, 64, 256):
+        r = c2c.data_parallel_ratio(base, b, 64)
+        emit(f"c2c/batch{b}", 0.0, f"ratio={r:.1f}")
+    r0 = c2c.data_parallel_ratio(base, 64, 64)
+    variants = {
+        "kernel5": c2c.conv_layer("conv", 256, 256, 5, 14, 14),
+        "feat512": c2c.conv_layer("conv", 512, 512, 3, 14, 14),
+        "stride2": c2c.conv_layer("conv", 256, 256, 3, 14, 14, stride=2),
+    }
+    for name, v in variants.items():
+        r = c2c.data_parallel_ratio(v, 64, 64)
+        emit(f"c2c/invariance/{name}", 0.0,
+             f"ratio={r:.1f};base={r0:.1f};equal={abs(r - r0) < 1e-6}")
+
+    # 2 -- strategy table (the DL Layer API decision, paper C2)
+    p = 64
+    for topo in ("resnet50", "vgg16"):
+        layers = cnn_tables.TOPOLOGIES[topo]()
+        report = planner.plan_report(layers, batch=2048, p=p)
+        counts = {}
+        fc_choice = None
+        for lp in report:
+            counts[lp.choice.strategy.value] = counts.get(
+                lp.choice.strategy.value, 0) + 1
+            if lp.kind == "fc" and fc_choice is None:
+                fc_choice = lp.choice
+        emit(f"c2c/strategy/{topo}", 0.0,
+             f"counts={counts};first_fc={fc_choice.strategy.value}"
+             f"@g{fc_choice.group_size}")
+
+    # 3 -- overlap benefit across the batch sweep
+    specs = cnn_tables.resnet50_layers()
+    for bs in (16, 32, 64):
+        layers = sim.layers_from_specs(specs, bs, hw.XEON_6148)
+        us = time_fn(lambda: sim.simulate_iteration(
+            layers, 64, hw.ETH_10G, sim.Policy.BLOCKING), iters=3)
+        vals = {}
+        for pol in sim.Policy:
+            st = sim.simulate_iteration(layers, 64, hw.ETH_10G, pol,
+                                        overlap_eff=0.7)
+            vals[pol.value] = st.exposed_comm
+        emit(f"overlap/resnet50/bs{bs}", us,
+             ";".join(f"exposed_{k}={v*1e3:.1f}ms" for k, v in vals.items()))
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper claim #1 (message prioritization): 'This optimization resulted in
+1.8x to 2.2x reduction in exposed communication time for standard topologies
+such as Resnet-50, VGG-16, and Googlenet on Intel Xeon Gold 6148 processors
+and 10Gbps Ethernet.'
+
+Reproduced with the discrete-event simulator (repro.core.simulator) on the
+same three topologies, node class (2-socket Xeon 6148) and fabric (10 GbE):
+FIFO-overlap (asynchronous reduction in issue order -- MPI semantics, the
+paper's baseline) vs MLSL's preemptive priority policy.
+
+Calibration: per-node mini-batch 32 (48 for GoogleNet) -- the strong-scaling
+regime the paper targets, where communication is comparable to compute --
+and overlap efficiency eta=0.7 (transfers overlapped with compute run at 70%
+of wire rate; imperfect asynchronous progress is exactly the host-resource
+effect MLSL's dedicated progress cores address).
+
+Expected outcome (EXPERIMENTS.md §Benchmarks): ResNet-50 1.9x and GoogleNet
+2.1x at their 32-node operating points, inside the paper's band; VGG-16
+2.4-2.9x, ABOVE the band, because 84% of its gradient bytes sit in three FC
+layers whose bulk transfers our zero-cost preemption rescues perfectly,
+while MLSL's real chunked preemption saturates near 2.2x. A refuted-then-
+explained hypothesis -- see EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+from repro.configs import cnn_tables
+from repro.core import hw, simulator as sim
+
+BATCH_PER_NODE = {"resnet50": 32, "vgg16": 32, "googlenet": 48}
+OVERLAP_EFF = 0.7
+NODES = (16, 32, 64)
+OPERATING_POINT = {"resnet50": 32, "vgg16": 64, "googlenet": 32}
+
+
+def run():
+    results = {}
+    for topo, layer_fn in cnn_tables.TOPOLOGIES.items():
+        specs = layer_fn()
+        layers = sim.layers_from_specs(specs, BATCH_PER_NODE[topo],
+                                       hw.XEON_6148)
+        for p in NODES:
+            us = time_fn(lambda: sim.simulate_iteration(
+                layers, p, hw.ETH_10G, sim.Policy.PRIORITY_OVERLAP,
+                overlap_eff=OVERLAP_EFF), iters=3)
+            fifo = sim.simulate_iteration(layers, p, hw.ETH_10G,
+                                          sim.Policy.FIFO_OVERLAP,
+                                          overlap_eff=OVERLAP_EFF)
+            prio = sim.simulate_iteration(layers, p, hw.ETH_10G,
+                                          sim.Policy.PRIORITY_OVERLAP,
+                                          overlap_eff=OVERLAP_EFF)
+            blocking = sim.simulate_iteration(layers, p, hw.ETH_10G,
+                                              sim.Policy.BLOCKING,
+                                              overlap_eff=OVERLAP_EFF)
+            red = (fifo.exposed_comm / prio.exposed_comm
+                   if prio.exposed_comm > 1e-9 else float("inf"))
+            results[(topo, p)] = red
+            emit(f"prioritization/{topo}/n{p}", us,
+                 f"exposed_fifo={fifo.exposed_comm*1e3:.1f}ms;"
+                 f"exposed_prio={prio.exposed_comm*1e3:.1f}ms;"
+                 f"exposed_blocking={blocking.exposed_comm*1e3:.1f}ms;"
+                 f"reduction={red:.2f}x")
+    op = [results[(t, OPERATING_POINT[t])] for t in cnn_tables.TOPOLOGIES]
+    emit("prioritization/summary", 0.0,
+         f"operating_point_reductions="
+         + ";".join(f"{t}={results[(t, OPERATING_POINT[t])]:.2f}x"
+                    for t in cnn_tables.TOPOLOGIES)
+         + f";paper_claim=1.8x..2.2x")
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

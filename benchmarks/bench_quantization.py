@@ -1,0 +1,75 @@
+"""Paper claim #3 (low-precision communication, C6): 'the precision for
+communication could be further reduced allowing for improved scaling.'
+
+Three measurements:
+  1. wire-volume reduction of the bf16 / int8(+scales) formats vs fp32
+     (analytic, from the collective composition in repro.core.collectives);
+  2. quantization fidelity: RMS error of the int8 block format on gradient-
+     like distributions, with and without error feedback accumulation;
+  3. data-path kernel cost: us/call of the (interpret-mode) Pallas block
+     quantizer vs the pure-jnp oracle across bucket sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import collectives, hw
+from repro.kernels import ops as kops
+
+
+def run():
+    # 1 -- wire volume
+    for wire in collectives.WIRES:
+        bpe = collectives.wire_bytes_per_elem(wire)
+        emit(f"quantization/wire_bytes/{wire}", 0.0,
+             f"bytes_per_elem={bpe:.3f};saving_vs_fp32="
+             f"{collectives.wire_bytes_per_elem('fp32') / bpe:.2f}x")
+        # derived effect on a 25 MB gradient bucket over 16 ranks, 10 GbE
+        nbytes = 25e6 * bpe / 4.0
+        t = hw.ring_allreduce_time(nbytes, 16, hw.ETH_10G)
+        emit(f"quantization/bucket_allreduce_model/{wire}", 0.0,
+             f"modeled_time_ms={t*1e3:.2f}")
+
+    # 2 -- fidelity
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (1 << 18,)) * 1e-3      # gradient-scale values
+    q, s, meta = kops.quantize(g, backend="jnp")
+    rmse = float(kops.quantization_rmse(g, backend="jnp"))
+    rel = rmse / float(jnp.sqrt(jnp.mean(g * g)))
+    emit("quantization/int8_rmse", 0.0,
+         f"rmse={rmse:.3e};relative={rel:.4f}")
+    # error feedback drives the accumulated bias to ~zero
+    acc_plain = jnp.zeros_like(g)
+    acc_ef = jnp.zeros_like(g)
+    resid = jnp.zeros_like(g)
+    for _ in range(16):
+        q, s, meta = kops.quantize(g, backend="jnp")
+        acc_plain = acc_plain + kops.dequantize(q, s, meta, backend="jnp")
+        q, s, meta = kops.quantize(g + resid, backend="jnp")
+        deq = kops.dequantize(q, s, meta, backend="jnp")
+        resid = g + resid - deq
+        acc_ef = acc_ef + deq
+    err_plain = float(jnp.linalg.norm(acc_plain - 16 * g))
+    err_ef = float(jnp.linalg.norm(acc_ef - 16 * g))
+    emit("quantization/error_feedback", 0.0,
+         f"accum16_err_plain={err_plain:.3e};accum16_err_ef={err_ef:.3e};"
+         f"improvement={err_plain / max(err_ef, 1e-12):.1f}x")
+
+    # 3 -- kernel cost (interpret mode on CPU; compiled on real TPU)
+    for n in (1 << 16, 1 << 20):
+        x = jax.random.normal(key, (n,))
+        us_jnp = time_fn(lambda x=x: kops.quantize(x, backend="jnp")[0])
+        us_pal = time_fn(lambda x=x: kops.quantize(x, backend="pallas")[0])
+        emit(f"quantization/kernel_n{n}", us_pal,
+             f"jnp_us={us_jnp:.1f};pallas_interpret_us={us_pal:.1f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

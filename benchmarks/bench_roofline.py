@@ -1,0 +1,48 @@
+"""Roofline summary: reads the dry-run artifacts (launch/dryrun.py writes
+artifacts/dryrun/*.json) and emits the per-(arch x shape x mesh) roofline
+terms as CSV -- the §Roofline table of EXPERIMENTS.md in benchmark form."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(ART_DIR, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0,
+             f"no dry-run artifacts in {ART_DIR}; run "
+             "`python -m repro.launch.dryrun --all --both-meshes` first")
+        return
+    n_ok = 0
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        tag = os.path.basename(f)[:-5]
+        if rec.get("status") == "ok":
+            r = rec["roofline"]
+            n_ok += 1
+            emit(f"roofline/{tag}", rec.get("compile_s", 0.0) * 1e6,
+                 f"dom={r['dominant']};t_compute={r['t_compute']:.3e};"
+                 f"t_memory={r['t_memory']:.3e};"
+                 f"t_collective={r['t_collective']:.3e};"
+                 f"useful_ratio={r['useful_ratio']:.3f}")
+        elif rec.get("status") == "skipped":
+            emit(f"roofline/{tag}", 0.0, "skipped:" + rec["reason"][:60])
+        else:
+            emit(f"roofline/{tag}", 0.0, "FAILED:" + rec.get("error", "?")[:80])
+    emit("roofline/summary", 0.0, f"records={len(files)};ok={n_ok}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper claim #2 (Fig. 2 + TF/Horovod): 'Resnet-50 scaling on Intel Xeon
+6148 and Intel Omnipath fabric using Intel Caffe and MLSL demonstrate 90%
+scaling on 256 nodes', and '>93% scaling efficiency ... on 64 nodes' for the
+MLSL-backed TF integration vs out-of-box Horovod-MPI.
+
+Methodology: strong scaling at global batch 8192 (the LARS-era ImageNet
+operating point) on 2S Xeon-6148 nodes; Omni-Path modeled at 4 GB/s
+effective allreduce bandwidth (era-typical MPI_Allreduce on 100 Gb OPA).
+The discrete-event model BRACKETS the measurement:
+
+  * lower bound = BLOCKING policy (no overlap at all),
+  * upper bound = PRIORITY policy with dedicated-core async progress
+    (eta=0.7) -- MLSL's design point.
+
+The paper's measured 90% @256 sits inside the bracket; the residual gap to
+the upper bound is input pipeline/update-step/jitter overhead outside a
+communication-scheduling model (EXPERIMENTS.md discusses). The Horovod
+comparison runs the FIFO policy with opportunistic progress (eta=0.45) --
+out-of-box MPI semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, time_fn
+from repro.configs import cnn_tables
+from repro.core import hw, simulator as sim
+
+GLOBAL_BATCH = 8192
+OPA_EFFECTIVE = dataclasses.replace(hw.OMNIPATH, bw=4e9)
+MLSL_EFF = 0.7
+HOROVOD_MPI_EFF = 0.45
+
+
+def run():
+    specs = cnn_tables.resnet50_layers()
+    out = {}
+    for p in (16, 32, 64, 128, 256):
+        bs = GLOBAL_BATCH // p
+        layers = sim.layers_from_specs(specs, bs, hw.XEON_6148)
+        us = time_fn(lambda: sim.simulate_iteration(
+            layers, p, OPA_EFFECTIVE, sim.Policy.PRIORITY_OVERLAP,
+            overlap_eff=MLSL_EFF), iters=3)
+        prio = sim.simulate_iteration(layers, p, OPA_EFFECTIVE,
+                                      sim.Policy.PRIORITY_OVERLAP,
+                                      overlap_eff=MLSL_EFF)
+        blocking = sim.simulate_iteration(layers, p, OPA_EFFECTIVE,
+                                          sim.Policy.BLOCKING,
+                                          overlap_eff=MLSL_EFF)
+        hvd = sim.simulate_iteration(layers, p, OPA_EFFECTIVE,
+                                     sim.Policy.FIFO_OVERLAP,
+                                     overlap_eff=HOROVOD_MPI_EFF)
+        e_hi = prio.compute_time / prio.total_time
+        e_lo = blocking.compute_time / blocking.total_time
+        e_hvd = hvd.compute_time / hvd.total_time
+        out[p] = (e_lo, e_hi, e_hvd)
+        emit(f"scaling/resnet50/opa/n{p}", us,
+             f"bs_per_node={bs};eff_blocking={e_lo:.3f};"
+             f"eff_mlsl={e_hi:.3f};eff_horovod_mpi={e_hvd:.3f}")
+    lo, hi, _ = out[256]
+    emit("scaling/summary/fig2", 0.0,
+         f"bracket_n256=[{lo:.3f},{hi:.3f}];paper_fig2=0.90;"
+         f"in_bracket={lo <= 0.90 <= hi}")
+    _, hi64, hvd64 = out[64]
+    emit("scaling/summary/tf_horovod", 0.0,
+         f"mlsl_eff_n64={hi64:.3f};paper_claim>0.93;"
+         f"consistent={hi64 > 0.93};horovod_mpi_n64={hvd64:.3f}")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

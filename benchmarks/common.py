@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing: CSV emission + timing."""
+
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (CPU; jitted fns blocked)."""
+    for _ in range(warmup):
+        r = fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        _block(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _block(x):
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except Exception:
+        pass

@@ -1,0 +1,40 @@
+"""Benchmark harness entry point: one module per paper table/figure/claim.
+
+  bench_prioritization -- 1.8-2.2x exposed-comm reduction (Xeon+10GbE)
+  bench_scaling        -- Fig. 2 ResNet-50/Omni-Path scaling + TF/Horovod
+  bench_quantization   -- low-precision wire formats (volume/fidelity/kernel)
+  bench_overlap        -- C2C ratio analysis + overlap policies
+  bench_collectives    -- collectives-API microbench + modeled pod times
+  bench_roofline       -- roofline terms from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (bench_collectives, bench_overlap,
+                        bench_prioritization, bench_quantization,
+                        bench_roofline, bench_scaling)
+
+MODULES = [bench_prioritization, bench_scaling, bench_quantization,
+           bench_overlap, bench_collectives, bench_roofline]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in MODULES:
+        try:
+            mod.run()
+        except Exception:                      # noqa: BLE001
+            failed.append(mod.__name__)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

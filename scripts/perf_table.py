@@ -1,0 +1,66 @@
+"""Render §Perf iteration comparisons from dry-run artifacts (tagged runs)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_all(art="artifacts/dryrun"):
+    out = {}
+    for f in glob.glob(os.path.join(art, "*.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        out[os.path.basename(f)[:-5]] = r
+    return out
+
+
+def row(recs, tag, label):
+    r = recs.get(tag)
+    if r is None:
+        return f"| {label} | (missing) |  |  |  |  |"
+    rf = r["roofline"]
+    return (f"| {label} | {rf['dominant']} | {rf['t_compute']:.3f} |"
+            f" {rf['t_memory']:.3f} | {rf['t_collective']:.3f} |"
+            f" {rf['wire_bytes']/1e9:.1f} |")
+
+
+HEADER = ("| variant | dominant | t_compute (s) | t_memory (s) |"
+          " t_collective (s) | wire GB/chip |\n|---|---|---|---|---|---|")
+
+GROUPS = {
+    "arctic-480b x train_4k": [
+        ("arctic-480b__train_4k__pod16x16", "baseline (paper-faithful)"),
+        ("arctic-480b__train_4k__pod16x16__ep", "+ EP all-to-all MoE"),
+        ("arctic-480b__train_4k__pod16x16__ep-wg8-a16",
+         "+ int8 weight gathers, accum 16"),
+        ("arctic-480b__train_4k__pod16x16__ep-wg8-a4",
+         "+ int8 weight gathers, accum 4 (best)"),
+    ],
+    "minicpm3-4b x prefill_32k": [
+        ("minicpm3-4b__prefill_32k__pod16x16", "baseline (paper-faithful)"),
+        ("minicpm3-4b__prefill_32k__pod16x16__kc1024",
+         "+ chunked attention (1024)"),
+        ("minicpm3-4b__prefill_32k__pod16x16__kc2048",
+         "chunk 2048 (refuted: worse)"),
+    ],
+    "yi-6b x train_4k": [
+        ("yi-6b__train_4k__pod16x16", "baseline (paper-faithful)"),
+        ("yi-6b__train_4k__pod16x16__kc1024", "+ chunked attention (1024)"),
+        ("yi-6b__train_4k__pod16x16__kc1024-a8", "+ accum 8"),
+        ("yi-6b__train_4k__pod16x16__dp-a8-kc1024",
+         "node-group=1 (DP/ZeRO-3) (refuted: collectives blow up)"),
+    ],
+}
+
+
+if __name__ == "__main__":
+    recs = load_all(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    for name, rows in GROUPS.items():
+        print(f"### {name}\n\n{HEADER}")
+        for tag, label in rows:
+            print(row(recs, tag, label))
+        print()

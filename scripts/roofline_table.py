@@ -1,0 +1,106 @@
+"""Render the §Dry-run / §Roofline markdown tables from artifacts/dryrun."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = ["yi-6b", "llava-next-mistral-7b", "minicpm3-4b", "arctic-480b",
+               "chatglm3-6b", "mamba2-2.7b", "recurrentgemma-2b",
+               "grok-1-314b", "whisper-small", "deepseek-7b"]
+
+
+def fmt_t(v):
+    if v >= 1:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v*1e3:.1f}ms"
+    return f"{v*1e6:.0f}us"
+
+
+def fmt_b(v):
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if v >= div:
+            return f"{v/div:.2f}{unit}"
+    return f"{v:.0f}B"
+
+
+def load(art_dir):
+    recs = {}
+    for f in glob.glob(os.path.join(art_dir, "*.json")):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if len(parts) != 3:
+            continue                      # variant runs handled separately
+        arch, shape, mesh = parts
+        with open(f) as fh:
+            recs[(arch, shape, mesh)] = json.load(fh)
+    return recs
+
+
+def roofline_table(recs, mesh="pod16x16"):
+    rows = ["| arch | shape | dominant | t_compute | t_memory | t_collective"
+            " | wire/chip | useful (6ND/HLO) | fit/chip |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ORDER_ARCHS:
+        for shape in ORDER_SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                rows.append(f"| {arch} | {shape} | *skipped* |  |  |  |  |  "
+                            f"| {r['reason'][:40]} |")
+                continue
+            rf = r["roofline"]
+            mem = r["memory"]
+            per_chip = mem["argument_bytes"] + mem["temp_bytes"]
+            fit = "ok" if per_chip < 16e9 else f"OVER ({fmt_b(per_chip)})"
+            rows.append(
+                f"| {arch} | {shape} | **{rf['dominant']}** |"
+                f" {fmt_t(rf['t_compute'])} | {fmt_t(rf['t_memory'])} |"
+                f" {fmt_t(rf['t_collective'])} | {fmt_b(rf['wire_bytes'])} |"
+                f" {rf['useful_ratio']:.2f} | {fit} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | 16x16 | 2x16x16 | compile(s) | args/chip |"
+            " temp/chip |", "|---|---|---|---|---|---|---|"]
+    for arch in ORDER_ARCHS:
+        for shape in ORDER_SHAPES:
+            r1 = recs.get((arch, shape, "pod16x16"))
+            r2 = recs.get((arch, shape, "pod2x16x16"))
+            if r1 is None and r2 is None:
+                continue
+            s1 = r1["status"] if r1 else "-"
+            s2 = r2["status"] if r2 else "-"
+            if s1 == "ok":
+                m = r1["memory"]
+                rows.append(f"| {arch} | {shape} | ok | {s2} |"
+                            f" {r1['compile_s']:.1f} |"
+                            f" {fmt_b(m['argument_bytes'])} |"
+                            f" {fmt_b(m['temp_bytes'])} |")
+            else:
+                rows.append(f"| {arch} | {shape} | {s1} | {s2} |  |  |  |")
+    return "\n".join(rows)
+
+
+def summarize(recs):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    fl = [k for k, r in recs.items() if r["status"] == "failed"]
+    return ok, sk, fl
+
+
+if __name__ == "__main__":
+    art = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    recs = load(art)
+    ok, sk, fl = summarize(recs)
+    print(f"records: ok={ok} skipped={sk} failed={fl}\n")
+    print("## Dry-run matrix\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single pod 16x16)\n")
+    print(roofline_table(recs))

@@ -1,0 +1,16 @@
+"""repro: "On Scale-out Deep Learning Training for Cloud and HPC" (Intel MLSL,
+SysML 2018) rebuilt as a production-style JAX/TPU framework.
+
+Layers:
+  repro.core        -- the paper's contribution: C2C analysis, hybrid-parallel
+                       planner, MLSL-style collectives, priority scheduler,
+                       network simulator, quantized communication.
+  repro.models      -- composable model zoo (dense/GQA/MLA/MoE/SSM/hybrid/
+                       enc-dec/VLM backbones).
+  repro.data/optim/train/serve/checkpoint -- training & serving substrate.
+  repro.kernels     -- Pallas TPU kernels (block int8 quantization data path).
+  repro.configs     -- assigned architectures and input shapes.
+  repro.launch      -- mesh construction, multi-pod dry-run, drivers.
+"""
+
+__version__ = "0.1.0"

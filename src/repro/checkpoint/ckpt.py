@@ -1,0 +1,81 @@
+"""Checkpointing: flat-path .npz payload + JSON manifest, restore with
+optional resharding onto a mesh.
+
+Single-host implementation (this container); the format is deliberately
+host-count-agnostic: every leaf is stored fully replicated under its tree
+path, and `restore` re-applies whatever shardings the planner dictates, so a
+checkpoint taken at one mesh shape restores onto another (the standard
+reshard-on-restore pattern)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(directory: str, tree: Any, *, step: int | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = jax.tree_util.tree_leaves_with_path(tree)
+    payload = {}
+    manifest = {"paths": [], "step": step}
+    for path, leaf in flat:
+        key = _path_str(path)
+        manifest["paths"].append(key)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            payload[key] = arr.view(np.uint16)
+            manifest.setdefault("bf16", []).append(key)
+        else:
+            payload[key] = arr
+    np.savez(os.path.join(directory, "payload.npz"), **payload)
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return directory
+
+
+def restore(directory: str, like: Any, *, shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: matching tree of NamedShardings."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    bf16 = set(manifest.get("bf16", []))
+    payload = np.load(os.path.join(directory, "payload.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    sh_leaves = (jax.tree_util.tree_leaves(shardings) if shardings is not None
+                 else [None] * len(flat))
+    out = []
+    for (path, leaf), sh in zip(flat, sh_leaves):
+        key = _path_str(path)
+        arr = payload[key]
+        if key in bf16:
+            arr = arr.view(jnp.bfloat16)
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                       leaf.shape)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str) -> int | None:
+    try:
+        with open(os.path.join(directory, "manifest.json")) as f:
+            return json.load(f).get("step")
+    except FileNotFoundError:
+        return None

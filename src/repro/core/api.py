@@ -1,0 +1,73 @@
+"""MLSL-style Session facade (the paper's two framework interfaces, C7).
+
+One object ties the library together the way MLSL's `Session`/`Distribution`
+did for Caffe/TF/nGraph:
+
+  * the *collectives* interface  -> `session.comm` (repro.core.collectives)
+  * the *DL Layer* interface     -> `session.planner` picks per-layer
+    partitioning from the C2C analysis and emits parameter/activation
+    shardings; `session.make_train_step()` wires the priority scheduler and
+    wire-precision into the training step.
+
+This is also the integration surface a framework would adopt (the paper
+integrates MLSL into Caffe/TensorFlow-Horovod/nGraph with exactly this kind
+of thin adapter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.core import c2c, collectives
+from repro.core.planner import Planner, make_planner, plan_report
+from repro.models.transformer import Model
+from repro.optim import optimizers as opt_lib
+from repro.train import trainer as tr
+
+
+@dataclasses.dataclass
+class Session:
+    mesh: jax.sharding.Mesh
+    planner: Planner
+    comm_cfg: tr.CommConfig
+
+    @classmethod
+    def create(cls, mesh: jax.sharding.Mesh, *, n_params: float = 0.0,
+               train: bool = True, comm: Optional[tr.CommConfig] = None,
+               hbm_budget: float = 16e9) -> "Session":
+        planner = make_planner(mesh, n_params, train=train,
+                               hbm_budget=hbm_budget)
+        return cls(mesh=mesh, planner=planner,
+                   comm_cfg=comm or tr.CommConfig())
+
+    # --- collectives interface ------------------------------------------------
+
+    @property
+    def comm(self) -> collectives.Comm:
+        return collectives.Comm(mesh=self.mesh,
+                                data_axes=self.planner.batch_axes,
+                                model_axis=self.planner.model_axis)
+
+    # --- DL layer interface ---------------------------------------------------
+
+    def param_shardings(self, model: Model):
+        return self.planner.tree_shardings(model.param_defs(),
+                                           stacked_paths=Model.stacked_path)
+
+    def layer_strategies(self, layers, batch: int):
+        """The per-layer data/model/hybrid decision table (paper C1/C2)."""
+        p = self.planner.batch_size_total * self.planner.model_size
+        return plan_report(layers, batch, p)
+
+    def make_train_step(self, model: Model, optimizer: opt_lib.Optimizer,
+                        **kw):
+        return tr.make_train_step(model, optimizer, self.mesh, self.planner,
+                                  self.comm_cfg, **kw)
+
+    def wire_savings(self) -> float:
+        """Wire-bytes multiplier of the configured precision vs fp32 (C6)."""
+        return (collectives.wire_bytes_per_elem(collectives.WIRE_FP32)
+                / collectives.wire_bytes_per_elem(self.comm_cfg.wire))

@@ -1,0 +1,249 @@
+"""Compute-to-communication (C2C) ratio analysis.
+
+This is the paper's analytical foundation (Section "Design choices and
+insights", following Das et al. 2016, arXiv:1602.06709): for every layer,
+compute the number of compute operations per communicated byte under each
+parallelization strategy, and pick the strategy that maximizes the ratio.
+
+Key paper insight reproduced here (and property-tested in
+tests/test_properties.py):
+
+  * Under *data parallelism* the C2C ratio of a conv layer is a function of
+    the output-featuremap size and the mini-batch (and overlap), and is
+    INDEPENDENT of kernel size, #input/#output feature maps, and stride.
+  * The ratio is proportional to the mini-batch -> strong-scaling shrinks the
+    per-node batch and communication starts to dominate (motivates
+    large-batch training, C3).
+  * Under *model parallelism* activations are exchanged instead of weight
+    gradients, flipping which layers are cheap to distribute.
+  * *Hybrid parallelism* interpolates with a node-group size g: model
+    parallelism inside a group of g nodes, data parallelism across p/g
+    groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Sequence
+
+from repro.core import hw
+
+
+class LayerKind(str, enum.Enum):
+    CONV = "conv"
+    FC = "fc"                  # fully-connected / generic matmul projection
+    ATTENTION = "attention"    # self-attention block (proj + score/context)
+    MOE = "moe"                # expert-parallel MLP
+    SSM = "ssm"                # state-space (SSD) mixer
+    EMBED = "embed"
+    NORM = "norm"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Shape summary of one layer, enough for the C2C analysis.
+
+    For convs: weight_elems = K*K*Cin*Cout, out_elems_per_sample = Ho*Wo*Cout.
+    For matmuls: weight_elems = Din*Dout, out_elems_per_sample = S*Dout.
+    flops_fwd_per_sample counts one forward pass of ONE sample.
+    """
+
+    name: str
+    kind: LayerKind
+    weight_elems: float
+    out_elems_per_sample: float
+    flops_fwd_per_sample: float
+    # multiplier for backward work relative to forward (dgrad + wgrad).
+    bwd_flops_factor: float = 2.0
+
+
+class Strategy(str, enum.Enum):
+    DATA = "data"
+    MODEL = "model"
+    HYBRID = "hybrid"
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyChoice:
+    strategy: Strategy
+    group_size: int            # model-parallel node-group size g (1 == data)
+    ratio: float               # achieved C2C ratio (flops per byte)
+    comm_bytes: float          # bytes communicated per iteration per node
+
+
+def _iter_flops(layer: LayerSpec, batch: int) -> float:
+    return layer.flops_fwd_per_sample * batch * (1.0 + layer.bwd_flops_factor)
+
+
+def data_parallel_ratio(layer: LayerSpec, batch: int, p: int,
+                        bytes_per_elem: float = 4.0) -> float:
+    """FLOPs per communicated byte with pure data parallelism.
+
+    Communication = ring allreduce of the weight gradient: each node moves
+    ~2 * W * (p-1)/p bytes per iteration regardless of batch, so the ratio
+    grows linearly with the batch -- the paper's large-batch argument.
+    """
+    if layer.weight_elems == 0:
+        return math.inf
+    comm = 2.0 * layer.weight_elems * bytes_per_elem * (p - 1) / max(p, 1)
+    if comm == 0:
+        return math.inf
+    return _iter_flops(layer, batch) / comm
+
+
+def model_parallel_ratio(layer: LayerSpec, batch: int, g: int,
+                         bytes_per_elem: float = 4.0) -> float:
+    """FLOPs per byte with the layer model-partitioned across g nodes.
+
+    Communication = activations + activation gradients crossing the partition
+    (allgather of the layer output and the reverse in backprop), which scales
+    with batch * output size; weights never move.
+    """
+    if g <= 1:
+        return math.inf
+    comm = 2.0 * layer.out_elems_per_sample * batch * bytes_per_elem \
+        * (g - 1) / g
+    if comm == 0:
+        return math.inf
+    return _iter_flops(layer, batch) / comm
+
+
+def hybrid_ratio(layer: LayerSpec, batch: int, p: int, g: int,
+                 bytes_per_elem: float = 4.0) -> float:
+    """Node groups of size g: model parallel inside, data parallel across.
+
+    Per-node communication is the sum of (a) activation exchange inside the
+    group (batch is divided across the p/g groups -> local batch b*g/p...
+    actually each group processes batch/(p/g) samples) and (b) the weight-
+    gradient allreduce across groups of the 1/g weight shard.
+    g == 1 degenerates to pure data parallelism, g == p to pure model
+    parallelism -- the paper's 'two extreme design points'.
+    """
+    if p % g != 0:
+        return 0.0
+    groups = p // g
+    local_batch = batch / groups
+    comm = 0.0
+    if g > 1:
+        comm += 2.0 * layer.out_elems_per_sample * local_batch \
+            * bytes_per_elem * (g - 1) / g
+    if groups > 1:
+        comm += 2.0 * (layer.weight_elems / g) * bytes_per_elem \
+            * (groups - 1) / groups
+    if comm == 0:
+        return math.inf
+    return _iter_flops(layer, batch) / comm
+
+
+def choose_strategy(layer: LayerSpec, batch: int, p: int,
+                    group_sizes: Sequence[int] | None = None,
+                    bytes_per_elem: float = 4.0) -> StrategyChoice:
+    """Pick the node-group size maximizing the C2C ratio for this layer.
+
+    This is the paper's 'choosing the right work partitioning strategy':
+    evaluated per layer, because conv-like layers (small weights, large
+    activations) prefer data parallelism while FC-like layers (large weights,
+    small activations) prefer model/hybrid parallelism.
+    """
+    if group_sizes is None:
+        group_sizes = [g for g in (1, 2, 4, 8, 16, 32) if g <= p and p % g == 0]
+    best_g, best_r = 1, -1.0
+    for g in group_sizes:
+        r = hybrid_ratio(layer, batch, p, g, bytes_per_elem)
+        if r > best_r:
+            best_g, best_r = g, r
+    if best_g == 1:
+        strat = Strategy.DATA
+    elif best_g == p:
+        strat = Strategy.MODEL
+    else:
+        strat = Strategy.HYBRID
+    flops = _iter_flops(layer, batch)
+    comm = flops / best_r if best_r not in (0.0, math.inf) else 0.0
+    return StrategyChoice(strategy=strat, group_size=best_g, ratio=best_r,
+                          comm_bytes=comm)
+
+
+# --- convenience constructors ------------------------------------------------
+
+def conv_layer(name: str, cin: int, cout: int, k: int, h_out: int, w_out: int,
+               stride: int = 1) -> LayerSpec:
+    del stride  # the ratio does not depend on it -- kept to document the claim
+    flops = 2.0 * cin * cout * k * k * h_out * w_out
+    return LayerSpec(name=name, kind=LayerKind.CONV,
+                     weight_elems=float(cin * cout * k * k),
+                     out_elems_per_sample=float(h_out * w_out * cout),
+                     flops_fwd_per_sample=flops)
+
+
+def fc_layer(name: str, din: int, dout: int, seq: int = 1) -> LayerSpec:
+    flops = 2.0 * din * dout * seq
+    return LayerSpec(name=name, kind=LayerKind.FC,
+                     weight_elems=float(din * dout),
+                     out_elems_per_sample=float(dout * seq),
+                     flops_fwd_per_sample=flops)
+
+
+def attention_layer(name: str, d_model: int, n_heads: int, head_dim: int,
+                    n_kv: int, seq: int) -> LayerSpec:
+    proj_w = d_model * (n_heads * head_dim + 2 * n_kv * head_dim
+                        + n_heads * head_dim)
+    proj_flops = 2.0 * seq * proj_w
+    score_flops = 2.0 * 2.0 * seq * seq * n_heads * head_dim * 0.5  # causal
+    return LayerSpec(name=name, kind=LayerKind.ATTENTION,
+                     weight_elems=float(proj_w),
+                     out_elems_per_sample=float(seq * d_model),
+                     flops_fwd_per_sample=proj_flops + score_flops)
+
+
+def mlp_layer(name: str, d_model: int, d_ff: int, seq: int,
+              gated: bool = True) -> LayerSpec:
+    n_mats = 3 if gated else 2
+    w = n_mats * d_model * d_ff
+    return LayerSpec(name=name, kind=LayerKind.FC,
+                     weight_elems=float(w),
+                     out_elems_per_sample=float(seq * d_model),
+                     flops_fwd_per_sample=2.0 * seq * w)
+
+
+def moe_layer(name: str, d_model: int, d_ff: int, n_experts: int, top_k: int,
+              seq: int, gated: bool = True) -> LayerSpec:
+    n_mats = 3 if gated else 2
+    w = n_experts * n_mats * d_model * d_ff
+    active = top_k * n_mats * d_model * d_ff
+    return LayerSpec(name=name, kind=LayerKind.MOE,
+                     weight_elems=float(w),
+                     out_elems_per_sample=float(seq * d_model),
+                     flops_fwd_per_sample=2.0 * seq * active)
+
+
+def ssm_layer(name: str, d_model: int, d_inner: int, d_state: int,
+              seq: int) -> LayerSpec:
+    w = d_model * 2 * d_inner + d_inner * d_model
+    flops = 2.0 * seq * w + 2.0 * seq * d_inner * d_state * 2
+    return LayerSpec(name=name, kind=LayerKind.SSM,
+                     weight_elems=float(w),
+                     out_elems_per_sample=float(seq * d_model),
+                     flops_fwd_per_sample=flops)
+
+
+def embed_layer(name: str, vocab: int, d_model: int, seq: int) -> LayerSpec:
+    return LayerSpec(name=name, kind=LayerKind.EMBED,
+                     weight_elems=float(vocab * d_model),
+                     out_elems_per_sample=float(seq * d_model),
+                     flops_fwd_per_sample=0.0)
+
+
+# --- iteration-level summaries (used by simulator calibration) ---------------
+
+def exposed_comm_upper_bound(layers: Sequence[LayerSpec], batch: int, p: int,
+                             link: hw.Link,
+                             bytes_per_elem: float = 4.0) -> float:
+    """Sum of allreduce times with zero overlap (the BLOCKING policy bound)."""
+    total = 0.0
+    for l in layers:
+        nbytes = l.weight_elems * bytes_per_elem
+        total += hw.ring_allreduce_time(nbytes, p, link)
+    return total

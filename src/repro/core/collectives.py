@@ -1,0 +1,217 @@
+"""MLSL-style collectives API (the paper's lower-level framework interface).
+
+The paper's library exposes MPI-like collectives but implements the
+performance-critical data path itself: asynchronous progress, message
+prioritization, and low-precision wire formats. On TPU/JAX the data path is
+expressed inside `shard_map` manual regions with `jax.lax` collectives; the
+DL-specific optimizations live here:
+
+  * wire-precision selection per collective ("fp32" | "bf16" | "int8"):
+    int8 composes reduce_scatter(bf16) -> block-quantize -> all_gather(int8 +
+    f32 scales) -> dequantize, cutting gathered wire bytes ~4x vs fp32;
+  * optional error-feedback residual for the lossy int8 path;
+  * fused/flattened bucket reduction (callers concatenate many small
+    gradients into one message -- see repro.core.scheduler).
+
+Everything here assumes it is called INSIDE a shard_map manual region over
+`axes` (a name or tuple of names). `Comm.run` wraps a function in such a
+region for convenience.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+WIRE_FP32 = "fp32"
+WIRE_BF16 = "bf16"
+WIRE_INT8 = "int8"
+WIRES = (WIRE_FP32, WIRE_BF16, WIRE_INT8)
+
+QUANT_BLOCK = 512
+
+
+def wire_bytes_per_elem(wire: str, compute_dtype=jnp.float32) -> float:
+    """Bytes that one gradient element occupies on the wire (amortized)."""
+    if wire == WIRE_FP32:
+        return jnp.dtype(compute_dtype).itemsize
+    if wire == WIRE_BF16:
+        return 2.0
+    if wire == WIRE_INT8:
+        # reduce-scatter leg in bf16 (2B/elem over 1 hop-volume) + all-gather
+        # leg in int8 (1B/elem) + one f32 scale per QUANT_BLOCK elements.
+        return (2.0 + 1.0 + 4.0 / QUANT_BLOCK) / 2.0
+    raise ValueError(wire)
+
+
+def _axes_tuple(axes) -> tuple:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def axis_size(axes) -> int:
+    """Product of the manual-axis sizes (callable inside shard_map)."""
+    size = 1
+    for a in _axes_tuple(axes):
+        size *= lax.axis_size(a)
+    return size
+
+
+def _pad_flat(flat: jax.Array, quantum: int) -> jax.Array:
+    n = flat.shape[0]
+    padded = ((n + quantum - 1) // quantum) * quantum
+    return jnp.pad(flat, (0, padded - n))
+
+
+def allreduce(x: jax.Array, axes, *, wire: str = WIRE_FP32,
+              mean: bool = False) -> jax.Array:
+    """Allreduce with a selectable wire precision. Shape-preserving."""
+    ax = _axes_tuple(axes)
+    p = axis_size(ax)
+    if wire == WIRE_FP32:
+        out = lax.psum(x, ax)
+    elif wire == WIRE_BF16:
+        out = lax.psum(x.astype(jnp.bfloat16), ax).astype(x.dtype)
+    elif wire == WIRE_INT8:
+        out = _allreduce_int8(x, ax)
+    else:
+        raise ValueError(wire)
+    if mean:
+        out = out / p
+    return out
+
+
+def _allreduce_int8(x: jax.Array, ax: tuple) -> jax.Array:
+    """reduce_scatter(bf16) + quantize + all_gather(int8) + dequantize."""
+    orig_dtype = x.dtype
+    flat = x.reshape(-1).astype(jnp.bfloat16)
+    p = axis_size(ax)
+    # shard must be a whole number of (TILE_ROWS x block) quantization rows
+    quantum = p * QUANT_BLOCK * 8  # kernels.quant8.TILE_ROWS == 8
+    flat = _pad_flat(flat, quantum)
+    shard = flat
+    for a in ax:                   # sequential scatter over each axis
+        shard = lax.psum_scatter(shard, a, scatter_dimension=0, tiled=True)
+    q, s, meta = kops.quantize(shard.astype(jnp.float32), block=QUANT_BLOCK,
+                               backend="jnp")
+    for a in reversed(ax):         # gather back in reverse order
+        q = lax.all_gather(q, a, axis=0, tiled=True)
+        s = lax.all_gather(s, a, axis=0, tiled=True)
+    full_meta = dataclasses.replace(meta, shape=(flat.shape[0],),
+                                    n=flat.shape[0], dtype=jnp.float32)
+    deq = kops.dequantize(q, s, full_meta, backend="jnp")
+    return deq[: x.size].reshape(x.shape).astype(orig_dtype)
+
+
+def allreduce_ef(x: jax.Array, residual: jax.Array, axes, *,
+                 mean: bool = False):
+    """int8 allreduce with error feedback.
+
+    `residual` has the shape of this rank's reduce-scatter shard (see
+    `ef_residual_shape`); the quantization error of the local shard is
+    carried into the next call, making the compression unbiased over time
+    (1-bit-SGD / DGC style -- paper refs [5,13,16]).
+    Returns (reduced, new_residual).
+    """
+    orig_dtype = x.dtype
+    ax = _axes_tuple(axes)
+    p = axis_size(ax)
+    flat = x.reshape(-1).astype(jnp.bfloat16)
+    quantum = p * QUANT_BLOCK * 8
+    flat = _pad_flat(flat, quantum)
+    shard = flat
+    for a in ax:
+        shard = lax.psum_scatter(shard, a, scatter_dimension=0, tiled=True)
+    shard = shard.astype(jnp.float32) + residual
+    q, s, meta = kops.quantize(shard, block=QUANT_BLOCK, backend="jnp")
+    new_residual = shard - kops.dequantize(q, s, meta, backend="jnp")
+    for a in reversed(ax):
+        q = lax.all_gather(q, a, axis=0, tiled=True)
+        s = lax.all_gather(s, a, axis=0, tiled=True)
+    full_meta = dataclasses.replace(meta, shape=(flat.shape[0],),
+                                    n=flat.shape[0], dtype=jnp.float32)
+    deq = kops.dequantize(q, s, full_meta, backend="jnp")
+    out = deq[: x.size].reshape(x.shape).astype(orig_dtype)
+    if mean:
+        out = out / p
+    return out, new_residual
+
+
+def ef_residual_shape(n_elems: int, p: int) -> tuple:
+    """Shape of the error-feedback residual for an n_elems bucket on p ranks."""
+    quantum = p * QUANT_BLOCK * 8
+    padded = ((n_elems + quantum - 1) // quantum) * quantum
+    return (padded // p,)
+
+
+def reduce_scatter(x: jax.Array, axes, *, wire: str = WIRE_FP32) -> jax.Array:
+    ax = _axes_tuple(axes)
+    y = x.astype(jnp.bfloat16) if wire == WIRE_BF16 else x
+    for a in ax:
+        y = lax.psum_scatter(y, a, scatter_dimension=0, tiled=True)
+    return y.astype(x.dtype)
+
+
+def all_gather(x: jax.Array, axes, *, axis: int = 0) -> jax.Array:
+    y = x
+    for a in reversed(_axes_tuple(axes)):
+        y = lax.all_gather(y, a, axis=axis, tiled=True)
+    return y
+
+
+def all_to_all(x: jax.Array, axes, *, split_axis: int,
+               concat_axis: int) -> jax.Array:
+    ax = _axes_tuple(axes)
+    assert len(ax) == 1, "all_to_all over a single mesh axis"
+    return lax.all_to_all(x, ax[0], split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=True)
+
+
+def broadcast(x: jax.Array, axes, *, root: int = 0) -> jax.Array:
+    """Broadcast rank `root`'s value (implemented as masked psum)."""
+    ax = _axes_tuple(axes)
+    idx = lax.axis_index(ax)
+    mask = (idx == root).astype(x.dtype)
+    return lax.psum(x * mask, ax)
+
+
+@dataclasses.dataclass(frozen=True)
+class Comm:
+    """A communicator bound to a mesh + manual axes (MLSL 'distribution').
+
+    `data_axes` are the gradient-reduction axes (data parallel dimension);
+    `model_axis` is the node-group axis used for model/hybrid parallelism.
+    """
+
+    mesh: jax.sharding.Mesh
+    data_axes: tuple
+    model_axis: str | None = "model"
+
+    def run(self, fn: Callable, in_specs, out_specs, *args,
+            extra_manual_axes: Sequence[str] = ()):
+        """Run `fn` manually over the data axes (model axis stays GSPMD)."""
+        manual = set(self.data_axes) | set(extra_manual_axes)
+        wrapped = jax.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                out_specs=out_specs, axis_names=manual,
+                                check_vma=False)
+        return wrapped(*args)
+
+    @property
+    def data_parallel_size(self) -> int:
+        size = 1
+        for a in self.data_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def model_parallel_size(self) -> int:
+        if self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]

@@ -1,0 +1,104 @@
+"""Hardware models shared by the C2C analysis, the network simulator, and the
+roofline harness.
+
+Two families are modeled:
+  * the paper's platforms (Intel Xeon Gold 6148 "Skylake" nodes on 10 GbE
+    Ethernet and on Intel Omni-Path) -- used to validate the paper's own
+    claims (prioritization 1.8-2.2x, ResNet-50 scaling, Fig. 2);
+  * the reproduction target (TPU v5e pods over ICI) -- used for the roofline
+    analysis of the dry-runs.
+
+All bandwidths are bytes/second, latencies are seconds, flops are FLOP/s.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    """A compute element (one node in the paper's terms, one chip in ours)."""
+
+    name: str
+    peak_flops: float          # peak FLOP/s at the training precision
+    mem_bw: float              # bytes/s main-memory bandwidth
+    mem_bytes: float           # capacity, bytes
+    # Fraction of peak a well-tuned dense workload sustains; used only by the
+    # simulator to turn FLOPs into seconds (the roofline harness reports raw
+    # peak-referred terms and never applies this).
+    sustained_frac: float = 0.55
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """A network link (NIC in the paper, ICI link on TPU)."""
+
+    name: str
+    bw: float                  # bytes/s per direction
+    latency: float             # per-message latency, seconds
+
+
+# --- reproduction target: TPU v5e ------------------------------------------
+TPU_V5E = Chip("tpu-v5e", peak_flops=197e12, mem_bw=819e9, mem_bytes=16e9)
+ICI_LINK = Link("ici", bw=50e9, latency=1e-6)
+
+# --- paper platforms ---------------------------------------------------------
+# 2-socket Xeon Gold 6148: 2 x 20 cores x 2.4 GHz x 32 SP FLOP/cycle ~ 6.1 TF
+# fp32 peak; DL kernels of the era sustained roughly half of that with MKL-DNN.
+XEON_6148 = Chip("xeon-6148-2s", peak_flops=6.1e12, mem_bw=2 * 128e9,
+                 mem_bytes=192e9, sustained_frac=0.45)
+ETH_10G = Link("10gbe", bw=1.25e9, latency=30e-6)
+OMNIPATH = Link("omni-path-100", bw=12.5e9, latency=1.5e-6)
+
+
+# --- collective time models --------------------------------------------------
+# Classic alpha-beta models; ring algorithms for bandwidth-bound collectives
+# (what MLSL/MPI used on Ethernet/OPA, and a faithful per-link model for ICI).
+
+def ring_allreduce_time(nbytes: float, p: int, link: Link) -> float:
+    """Ring allreduce: 2(p-1) steps, each moving nbytes/p."""
+    if p <= 1 or nbytes <= 0:
+        return 0.0
+    steps = 2 * (p - 1)
+    return steps * link.latency + steps * (nbytes / p) / link.bw
+
+
+def reduce_scatter_time(nbytes: float, p: int, link: Link) -> float:
+    if p <= 1 or nbytes <= 0:
+        return 0.0
+    steps = p - 1
+    return steps * link.latency + steps * (nbytes / p) / link.bw
+
+
+def all_gather_time(nbytes: float, p: int, link: Link) -> float:
+    # nbytes = full (gathered) size.
+    if p <= 1 or nbytes <= 0:
+        return 0.0
+    steps = p - 1
+    return steps * link.latency + steps * (nbytes / p) / link.bw
+
+
+def all_to_all_time(nbytes: float, p: int, link: Link) -> float:
+    """Pairwise-exchange all-to-all; nbytes = local send buffer size."""
+    if p <= 1 or nbytes <= 0:
+        return 0.0
+    steps = p - 1
+    return steps * link.latency + nbytes * (p - 1) / p / link.bw
+
+
+def latency_bound_fraction(nbytes: float, p: int, link: Link) -> float:
+    """Fraction of a ring allreduce spent in per-message latency.
+
+    The paper's first-layer gradients are 'latency bound': this is ~1 for
+    small messages and ->0 for large ones.
+    """
+    t = ring_allreduce_time(nbytes, p, link)
+    if t == 0:
+        return 0.0
+    return (2 * (p - 1) * link.latency) / t
+
+
+def tree_depth(p: int) -> int:
+    return max(1, int(math.ceil(math.log2(max(p, 2)))))

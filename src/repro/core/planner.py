@@ -1,0 +1,257 @@
+"""The DL Layer API: per-layer/per-parameter work-partitioning (paper C2/C7).
+
+The paper's higher-level interface lets a framework declare layers and have
+the library pick the communication pattern implied by the parallelism chosen
+for each layer (data / model / hybrid with node groups). Here the same role
+is played by a planner that maps every parameter (and activation) to a
+`PartitionSpec` over the production mesh:
+
+  * the `model` mesh axis is the node group (model parallelism inside it);
+  * the batch axes (`pod`, `data`) carry data parallelism across groups;
+  * the C2C analysis (repro.core.c2c) picks data vs model vs hybrid per
+    layer kind, and the planner additionally applies parameter/optimizer
+    sharding over the batch axes (ZeRO/FSDP-style) when the replicated
+    footprint would not fit the per-chip HBM budget.
+
+Models declare parameters as `ParamDef`s with a *kind*; the planner owns the
+kind -> sharding rules, so models stay distribution-agnostic (the paper's
+argument for putting this logic in the library, not the framework).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import c2c
+
+# Parameter kinds understood by the planner.
+K_EMBED = "embed"            # (vocab, d)
+K_HEAD = "head"              # (d, vocab)
+K_PROJ_IN = "proj_in"        # (d_in, d_out): output dim model-sharded (wq/w1)
+K_PROJ_OUT = "proj_out"      # (d_in, d_out): input dim model-sharded (wo/w2)
+K_EXPERT_IN = "expert_in"    # (E, d, ff)
+K_EXPERT_OUT = "expert_out"  # (E, ff, d)
+K_VEC_MODEL = "vec_model"    # (n,): per-channel param of a model-sharded dim
+K_CONV_MODEL = "conv_model"  # (channels, kwidth): channels model-sharded
+K_NORM = "norm"              # replicated small vectors
+K_SCALAR = "scalar"
+K_REPLICATED = "replicated"  # explicitly replicated projections (small latents)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape + dtype + planner kind + init style."""
+
+    shape: tuple
+    kind: str
+    dtype: object = jnp.float32
+    init: str = "normal"       # normal | zeros | ones | scaled
+    init_scale: float | None = None   # overrides 1/sqrt(fan_in)
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+def _divides(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+@dataclasses.dataclass
+class Planner:
+    """Maps ParamDefs and activations to PartitionSpecs on a mesh."""
+
+    mesh: Mesh
+    model_axis: str = "model"
+    fsdp: bool = False
+    # extra layer stacked as a leading scan dimension ('blocks', L, ...)
+    stacked: bool = True
+    # node-group size 1 (paper C2): pure data parallelism over EVERY mesh
+    # axis; the model axis joins the batch axes and parameters are only
+    # sharded ZeRO-style (requires fsdp for anything big).
+    dp_only: bool = False
+
+    def __post_init__(self):
+        names = tuple(self.mesh.axis_names)
+        if self.dp_only:
+            self.batch_axes = names
+            self.model_size = 1
+        else:
+            self.batch_axes = tuple(a for a in names if a != self.model_axis)
+            self.model_size = (self.mesh.shape[self.model_axis]
+                               if self.model_axis in names else 1)
+        self.batch_size_total = 1
+        for a in self.batch_axes:
+            self.batch_size_total *= self.mesh.shape[a]
+
+    # -- parameters -----------------------------------------------------------
+
+    def spec_for(self, pd: ParamDef, *, stacked: bool = False) -> P:
+        """PartitionSpec for a parameter (optionally with a leading scan dim)."""
+        dims = [None] * len(pd.shape)
+        offset = 1 if stacked else 0     # leading (L, ...) scan dim: replicated
+        shape = pd.shape[offset:] if stacked else pd.shape
+        kind = pd.kind
+
+        def try_model(cands):
+            if self.dp_only:
+                return None
+            for d in cands:
+                if _divides(shape[d], self.model_size):
+                    dims[d + offset] = self.model_axis
+                    return d
+            return None
+
+        def try_fsdp(cands, taken):
+            if not self.fsdp:
+                return
+            for d in cands:
+                if d == taken:
+                    continue
+                for axes in (self.batch_axes, self.batch_axes[-1:]):
+                    sz = 1
+                    for a in axes:
+                        sz *= self.mesh.shape[a]
+                    if _divides(shape[d], sz) and shape[d] >= 2 * sz:
+                        dims[d + offset] = axes if len(axes) > 1 else axes[0]
+                        return
+
+        if kind in (K_NORM, K_SCALAR, K_REPLICATED):
+            pass
+        elif kind == K_EMBED:
+            taken = try_model([0, 1])
+            try_fsdp([1, 0], taken)
+        elif kind == K_HEAD:
+            taken = try_model([1, 0])
+            try_fsdp([0, 1], taken)
+        elif kind == K_PROJ_IN:
+            taken = try_model([len(shape) - 1])
+            try_fsdp([0], taken)
+        elif kind == K_PROJ_OUT:
+            taken = try_model([0])
+            try_fsdp([len(shape) - 1], taken)
+        elif kind == K_EXPERT_IN:        # (E, d, ff)
+            taken = try_model([0, 2])
+            try_fsdp([1], taken)
+        elif kind == K_EXPERT_OUT:       # (E, ff, d)
+            taken = try_model([0, 1])
+            try_fsdp([2], taken)
+        elif kind == K_VEC_MODEL:
+            try_model([0])
+        elif kind == K_CONV_MODEL:
+            taken = try_model([0])
+            del taken
+        else:
+            raise ValueError(f"unknown param kind {kind!r}")
+        return P(*dims)
+
+    def sharding_for(self, pd: ParamDef, *, stacked: bool = False) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(pd, stacked=stacked))
+
+    # -- activations ----------------------------------------------------------
+
+    def batch_spec_axes(self, batch: int):
+        """Largest batch-axis group that evenly divides `batch`."""
+        for axes in (self.batch_axes, self.batch_axes[-1:], ()):
+            sz = 1
+            for a in axes:
+                sz *= self.mesh.shape[a]
+            if axes == () or _divides(batch, sz):
+                return axes
+        return ()
+
+    def tokens_spec(self, batch: int, extra_dims: int = 1) -> P:
+        axes = self.batch_spec_axes(batch)
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        return P(lead, *([None] * extra_dims))
+
+    def logits_spec(self, batch: int, vocab: int) -> P:
+        axes = self.batch_spec_axes(batch)
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        v = self.model_axis if _divides(vocab, self.model_size) else None
+        return P(lead, None, v)
+
+    def kv_cache_spec(self, batch: int, seq: int, n_kv: int) -> P:
+        """(B, S, n_kv, head_dim) cache: batch over data axes; if the KV-head
+        count does not split over the model axis, shard the sequence instead
+        (distributed 'flash-decoding' layout)."""
+        axes = self.batch_spec_axes(batch)
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        if self.dp_only:
+            return P(lead, None, None, None)
+        if _divides(n_kv, self.model_size):
+            return P(lead, None, self.model_axis, None)
+        if _divides(seq, self.model_size):
+            return P(lead, self.model_axis, None, None)
+        return P(lead, None, None, None)
+
+    def state_spec(self, batch: int, dim: int) -> P:
+        """(B, dim, ...) recurrent state: dim over model if divisible."""
+        axes = self.batch_spec_axes(batch)
+        lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+        d = self.model_axis if _divides(dim, self.model_size) else None
+        return P(lead, d)
+
+    # -- trees ----------------------------------------------------------------
+
+    def tree_specs(self, defs_tree, *, stacked_paths: Callable[[tuple], bool] | None = None):
+        """ParamDef tree -> PartitionSpec tree. `stacked_paths(path)` marks
+        subtrees whose leaves carry a leading (L,) scan dimension."""
+        def one(path, pd):
+            st = stacked_paths(path) if stacked_paths else False
+            return self.spec_for(pd, stacked=st)
+        return jax.tree_util.tree_map_with_path(
+            one, defs_tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+    def tree_shardings(self, defs_tree, **kw):
+        specs = self.tree_specs(defs_tree, **kw)
+        return jax.tree_util.tree_map(lambda s: NamedSharding(self.mesh, s),
+                                      specs)
+
+
+def decide_fsdp(n_params: float, model_size: int, *, train: bool = True,
+                bytes_per_param_state: float = 14.0,
+                hbm_budget: float = 16e9, frac: float = 0.55) -> bool:
+    """Should parameters/optimizer state also shard over the batch axes?
+
+    Replicated-across-groups footprint = N * state_bytes / model_group_size;
+    enable FSDP when that exceeds `frac` of per-chip HBM.
+    """
+    bpp = bytes_per_param_state if train else 2.0
+    return (n_params * bpp / max(model_size, 1)) > frac * hbm_budget
+
+
+def make_planner(mesh: Mesh, n_params: float, *, train: bool = True,
+                 bytes_per_param_state: float = 14.0,
+                 hbm_budget: float = 16e9) -> Planner:
+    model_size = mesh.shape.get("model", 1)
+    fsdp = decide_fsdp(n_params, model_size, train=train,
+                       bytes_per_param_state=bytes_per_param_state,
+                       hbm_budget=hbm_budget)
+    return Planner(mesh=mesh, fsdp=fsdp)
+
+
+# --- the per-layer strategy report (the paper's Table-1-style view) ----------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    name: str
+    kind: str
+    choice: c2c.StrategyChoice
+
+
+def plan_report(layers: Sequence[c2c.LayerSpec], batch: int, p: int,
+                group_sizes: Sequence[int] | None = None):
+    """Run the C2C chooser over a layer list — what MLSL's DL Layer API would
+    decide for each layer of the network on p nodes."""
+    report = []
+    for l in layers:
+        choice = c2c.choose_strategy(l, batch, p, group_sizes=group_sizes)
+        report.append(LayerPlan(name=l.name, kind=l.kind.value, choice=choice))
+    return report

@@ -1,0 +1,199 @@
+"""Gradient bucketing + message prioritization (paper C4/C5).
+
+MLSL's runtime preempts in-flight bulk gradient exchanges so the *first*
+layer's small, latency-bound allreduce — whose result is needed immediately
+at the start of the next forward pass — completes first. XLA programs are
+statically scheduled, so the same policy is expressed *structurally*:
+
+  1. gradients are fused into buckets (flattened + concatenated, MLSL/Horovod
+     message fusion), keyed by the layer order of the FORWARD pass;
+  2. buckets are reduced in priority order (forward-first), each bucket's
+     collective made dependent on the previous one's completion via
+     `lax.optimization_barrier` token threading.
+
+In `comm=mlsl` mode the collectives are explicit (repro.core.collectives), so
+the chain provably orders them in the HLO (tests assert this). In
+`comm=gspmd` mode the reductions are partitioner-inserted and the chain is a
+best-effort scheduling hint placed between gradient computation and the
+optimizer; the quantitative benefit is established by the simulator either
+way (benchmarks/bench_prioritization.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """A fused gradient message."""
+
+    priority: int              # 0 == most urgent (first forward layers)
+    leaf_ids: tuple            # indices into the flattened gradient tree
+    sizes: tuple               # element counts, same order as leaf_ids
+    shapes: tuple
+    dtypes: tuple
+
+    @property
+    def n_elems(self) -> int:
+        return int(sum(self.sizes))
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    buckets: tuple             # ordered by priority (most urgent first)
+    treedef: object            # treedef of the gradient tree
+
+
+def plan_buckets(grad_tree, layer_index: Callable[[tuple], float] | None = None,
+                 *, bucket_bytes: float = 25e6, bytes_per_elem: float = 4.0,
+                 group_key: Callable[[tuple], object] | None = None) -> BucketPlan:
+    """Group gradient leaves into fused messages ordered by forward depth.
+
+    `layer_index(path)` maps a tree path to the layer's position in the
+    forward pass (0 == first). Defaults to the tree's natural leaf order.
+    A new bucket starts whenever the running size exceeds `bucket_bytes`,
+    so early (urgent) layers end up in small, low-latency messages and bulk
+    weight gradients in large, bandwidth-efficient ones.
+    """
+    leaves_with_paths = jax.tree_util.tree_leaves_with_path(grad_tree)
+    treedef = jax.tree_util.tree_structure(grad_tree)
+    order = list(range(len(leaves_with_paths)))
+    if layer_index is not None:
+        order.sort(key=lambda i: layer_index(leaves_with_paths[i][0]))
+
+    buckets = []
+    cur_ids, cur_sizes, cur_shapes, cur_dtypes, cur_bytes = [], [], [], [], 0.0
+    cur_key = object()
+    for i in order:
+        path, leaf = leaves_with_paths[i]
+        key = group_key(path) if group_key else None
+        if group_key and cur_ids and key != cur_key:
+            # sharding boundary: never fuse differently-sharded leaves
+            buckets.append(Bucket(priority=len(buckets), leaf_ids=tuple(cur_ids),
+                                  sizes=tuple(cur_sizes), shapes=tuple(cur_shapes),
+                                  dtypes=tuple(cur_dtypes)))
+            cur_ids, cur_sizes, cur_shapes, cur_dtypes, cur_bytes = [], [], [], [], 0.0
+        cur_key = key
+        cur_ids.append(i)
+        cur_sizes.append(int(leaf.size))
+        cur_shapes.append(tuple(leaf.shape))
+        cur_dtypes.append(leaf.dtype)
+        cur_bytes += leaf.size * bytes_per_elem
+        if cur_bytes >= bucket_bytes:
+            buckets.append(Bucket(priority=len(buckets), leaf_ids=tuple(cur_ids),
+                                  sizes=tuple(cur_sizes), shapes=tuple(cur_shapes),
+                                  dtypes=tuple(cur_dtypes)))
+            cur_ids, cur_sizes, cur_shapes, cur_dtypes, cur_bytes = [], [], [], [], 0.0
+    if cur_ids:
+        buckets.append(Bucket(priority=len(buckets), leaf_ids=tuple(cur_ids),
+                              sizes=tuple(cur_sizes), shapes=tuple(cur_shapes),
+                              dtypes=tuple(cur_dtypes)))
+    return BucketPlan(buckets=tuple(buckets), treedef=treedef)
+
+
+def fuse_bucket(leaves: Sequence[jax.Array], bucket: Bucket) -> jax.Array:
+    """Concatenate a bucket's gradient leaves into one flat f32 message."""
+    parts = [leaves[i].reshape(-1).astype(jnp.float32) for i in bucket.leaf_ids]
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unfuse_bucket(flat: jax.Array, bucket: Bucket) -> dict:
+    """Split a fused message back into {leaf_id: leaf}."""
+    out = {}
+    off = 0
+    for lid, size, shape, dtype in zip(bucket.leaf_ids, bucket.sizes,
+                                       bucket.shapes, bucket.dtypes):
+        out[lid] = flat[off:off + size].reshape(shape).astype(dtype)
+        off += size
+    return out
+
+
+def _token_of(x: jax.Array) -> jax.Array:
+    """A scalar data-dependent on x, cheap to thread through barriers."""
+    return x.reshape(-1)[0]
+
+
+def reduce_with_priority(grad_tree, reduce_fn: Callable[[jax.Array, Bucket], jax.Array],
+                         plan: BucketPlan, *, prioritize: bool = True,
+                         fuse: bool = True):
+    """Apply `reduce_fn(message, bucket)` per bucket, priority-chained.
+
+    With `prioritize=True`, bucket k+1's message is data-dependent on bucket
+    k's reduced result (via optimization_barrier token threading), forcing the
+    compiler to issue/retire collectives in forward-layer order — the
+    structural equivalent of MLSL preempting bulk transfers. With False, the
+    buckets are left unordered (FIFO/bulk-synchronous behaviour, the
+    baseline the paper compares against).
+
+    `fuse=False` keeps each leaf as its own message and only threads the
+    barrier chain. THIS IS REQUIRED UNDER GSPMD-SHARDED GRADIENTS: flattening
+    and concatenating a sharded tensor forces the partitioner to all-gather
+    it (measured 2x625 GB/chip on arctic-480b -- EXPERIMENTS.md §Perf
+    iteration A0). Message fusion is only meaningful where the caller
+    controls the wire layout (the mlsl manual data path) and the leaves are
+    replicated over the auto axes.
+    """
+    leaves = jax.tree_util.tree_leaves(grad_tree)
+    new_leaves = list(leaves)
+    token = None
+    for bucket in plan.buckets:
+        if fuse:
+            flat = fuse_bucket(leaves, bucket)
+            if prioritize and token is not None:
+                flat, token = lax.optimization_barrier((flat, token))
+            reduced = reduce_fn(flat, bucket)
+            if prioritize:
+                token = _token_of(reduced)
+            for lid, leaf in unfuse_bucket(reduced, bucket).items():
+                new_leaves[lid] = leaf
+        else:
+            vals = [leaves[i] for i in bucket.leaf_ids]
+            if prioritize and token is not None:
+                vals, token = lax.optimization_barrier((vals, token))
+            vals = [reduce_fn(v, bucket) for v in vals]
+            if prioritize:
+                token = _token_of(vals[0])
+            for lid, leaf in zip(bucket.leaf_ids, vals):
+                new_leaves[lid] = leaf
+    return jax.tree_util.tree_unflatten(plan.treedef, new_leaves)
+
+
+def chain_barrier(values, token):
+    """Expose the token-threading primitive for other schedulers (serving,
+    activation prioritization in model/hybrid parallelism)."""
+    if token is None:
+        return values, None
+    values, token = lax.optimization_barrier((values, token))
+    return values, token
+
+
+def default_layer_index(path: tuple) -> float:
+    """Heuristic forward-depth key for common param-tree layouts.
+
+    Understands paths like ('layers', 3, 'attn', 'wq') and stacked-scan params
+    ('blocks', 'attn', 'wq') (depth unknown -> middle), with 'embed' first and
+    'head'/'final' last.
+    """
+    names = []
+    idx = None
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            idx = p.idx
+        else:
+            names.append(str(p))
+    joined = "/".join(names).lower()
+    if "embed" in joined or "tok_emb" in joined:
+        return -1.0
+    if "head" in joined or "final" in joined or "lm_out" in joined:
+        return 1e9
+    if idx is not None:
+        return float(idx)
+    return 1e6  # stacked/unknown: after explicit layers, before the head

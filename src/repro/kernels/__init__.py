@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the performance-critical data paths:
+
+  quant8     -- block int8 quantize / dequantize / dequant-accumulate
+                (the low-precision communication wire format, paper C6)
+  flashattn  -- online-softmax attention (VMEM-tiled forward kernel)
+  ops        -- shape-polymorphic jit wrappers with backend selection
+  ref        -- pure-jnp oracles (ground truth for tests; CPU fallback)
+"""

@@ -1,0 +1,100 @@
+"""Public, shape-polymorphic wrappers over the quantization kernels.
+
+`quantize`/`dequantize` accept arbitrary-shaped tensors: they flatten, pad to
+the kernel's (TILE_ROWS x block) tiling, and restore shape on the way back.
+
+Backend selection:
+  * "pallas"  -- pl.pallas_call (compiled on TPU; interpret=True elsewhere).
+  * "jnp"     -- the pure-jnp oracle (identical math; used inside GSPMD-
+                 partitioned regions and as the CPU default).
+  * "auto"    -- pallas on TPU, jnp otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import quant8, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantMeta:
+    """Static metadata needed to invert `quantize`."""
+
+    shape: tuple
+    dtype: Any
+    n: int                # true element count before padding
+    block: int
+
+
+def _backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+def _to_blocks(x: jax.Array, block: int):
+    """Flatten + zero-pad to (n_blocks, block) with n_blocks % TILE_ROWS == 0."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    row_quantum = block * quant8.TILE_ROWS
+    padded = ((n + row_quantum - 1) // row_quantum) * row_quantum
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, block), n
+
+
+def quantize(x: jax.Array, *, block: int = quant8.DEFAULT_BLOCK,
+             backend: str = "auto"):
+    """x (any shape) -> (q int8 (n_blocks, block), scales f32, QuantMeta)."""
+    be = _backend(backend)
+    x2d, n = _to_blocks(x, block)
+    if be == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        q, s = quant8.quantize_blocks(x2d, interpret=interpret)
+    else:
+        q, s = ref.quantize_blocks(x2d)
+    meta = QuantMeta(shape=tuple(x.shape), dtype=x.dtype, n=n, block=block)
+    return q, s, meta
+
+
+def dequantize(q: jax.Array, scales: jax.Array, meta: QuantMeta, *,
+               backend: str = "auto") -> jax.Array:
+    be = _backend(backend)
+    if be == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        x2d = quant8.dequantize_blocks(q, scales, out_dtype=jnp.float32,
+                                       interpret=interpret)
+    else:
+        x2d = ref.dequantize_blocks(q, scales, out_dtype=jnp.float32)
+    flat = x2d.reshape(-1)[: meta.n]
+    return flat.reshape(meta.shape).astype(meta.dtype)
+
+
+def dequantize_accumulate(q: jax.Array, scales: jax.Array, acc: jax.Array,
+                          meta: QuantMeta, *,
+                          backend: str = "auto") -> jax.Array:
+    """acc (same logical shape as the original tensor) + dequant(q)."""
+    be = _backend(backend)
+    acc2d, _ = _to_blocks(acc, meta.block)
+    if be == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        x2d = quant8.dequantize_accumulate_blocks(
+            q, scales, acc2d, out_dtype=jnp.float32, interpret=interpret)
+    else:
+        x2d = ref.dequantize_accumulate_blocks(q, scales, acc2d,
+                                               out_dtype=jnp.float32)
+    flat = x2d.reshape(-1)[: meta.n]
+    return flat.reshape(meta.shape).astype(meta.dtype)
+
+
+def quantization_rmse(x: jax.Array, *, block: int = quant8.DEFAULT_BLOCK,
+                      backend: str = "jnp") -> jax.Array:
+    """Convenience: RMS error of a quantize/dequantize round trip."""
+    q, s, meta = quantize(x, block=block, backend=backend)
+    xr = dequantize(q, s, meta, backend=backend)
+    return jnp.sqrt(jnp.mean((x.astype(jnp.float32) - xr.astype(jnp.float32)) ** 2))

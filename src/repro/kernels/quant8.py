@@ -1,0 +1,119 @@
+"""Pallas TPU kernels for block-wise symmetric int8 quantization.
+
+This is the performance-critical data-path operation of the paper's
+low-precision communication feature (C6): gradients are quantized to int8
+with one fp32 scale per block before hitting the wire, and dequantized (and
+optionally accumulated) after the collective.
+
+TPU mapping: the gradient bucket is viewed as (n_blocks, block) with
+block a multiple of 128 (lane width) so each VMEM tile is MXU/VPU aligned.
+The grid walks row-tiles of TILE_ROWS blocks; abs-max reduction, scaling and
+rounding all happen inside VMEM, one HBM round-trip total -- on CPU the same
+kernels run under interpret=True and are validated against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width on TPU is 128; sublane granularity for fp32 is 8.
+LANE = 128
+DEFAULT_BLOCK = 512          # elements per quantization block (multiple of 128)
+TILE_ROWS = 8                # quantization blocks handled per grid step
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref):
+    """One tile: (TILE_ROWS, block) f32 -> int8 + per-row scale."""
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1)                   # (rows,)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequantize_kernel(q_ref, s_ref, o_ref, *, out_dtype):
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s[:, None]).astype(out_dtype)
+
+
+def _dequant_accum_kernel(q_ref, s_ref, acc_ref, o_ref, *, out_dtype):
+    """Fused dequantize + accumulate: o = acc + q * s (error-feedback path)."""
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    acc = acc_ref[...].astype(jnp.float32)
+    o_ref[...] = (acc + q * s[:, None]).astype(out_dtype)
+
+
+def _grid(n_blocks: int) -> tuple:
+    assert n_blocks % TILE_ROWS == 0, (n_blocks, TILE_ROWS)
+    return (n_blocks // TILE_ROWS,)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_blocks(x2d: jax.Array, *, interpret: bool = False):
+    """x2d: (n_blocks, block) float -> (int8 (n_blocks, block), f32 (n_blocks,)).
+
+    n_blocks must be a multiple of TILE_ROWS and block a multiple of LANE
+    (callers pad; see repro.kernels.ops).
+    """
+    n_blocks, block = x2d.shape
+    assert block % LANE == 0, block
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=_grid(n_blocks),
+        in_specs=[pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, block), jnp.int8),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def dequantize_blocks(q2d: jax.Array, scales: jax.Array, *,
+                      out_dtype=jnp.float32, interpret: bool = False):
+    n_blocks, block = q2d.shape
+    assert block % LANE == 0, block
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel, out_dtype=out_dtype),
+        grid=_grid(n_blocks),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block), out_dtype),
+        interpret=interpret,
+    )(q2d, scales)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def dequantize_accumulate_blocks(q2d: jax.Array, scales: jax.Array,
+                                 acc: jax.Array, *, out_dtype=jnp.float32,
+                                 interpret: bool = False):
+    n_blocks, block = q2d.shape
+    assert block % LANE == 0, block
+    return pl.pallas_call(
+        functools.partial(_dequant_accum_kernel, out_dtype=out_dtype),
+        grid=_grid(n_blocks),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS,), lambda i: (i,)),
+            pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block), out_dtype),
+        interpret=interpret,
+    )(q2d, scales, acc)

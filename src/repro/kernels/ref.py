@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (used by tests and as the CPU
+fallback's ground truth). Signatures mirror repro.kernels.quant8."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_blocks(x2d: jax.Array):
+    x = x2d.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_blocks(q2d: jax.Array, scales: jax.Array, *,
+                      out_dtype=jnp.float32):
+    return (q2d.astype(jnp.float32)
+            * scales.astype(jnp.float32)[:, None]).astype(out_dtype)
+
+
+def dequantize_accumulate_blocks(q2d: jax.Array, scales: jax.Array,
+                                 acc: jax.Array, *, out_dtype=jnp.float32):
+    deq = q2d.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+    return (acc.astype(jnp.float32) + deq).astype(out_dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None):
+    """Oracle for kernels.flashattn: plain masked softmax attention.
+
+    q/k/v (B, H, S, D)."""
+    import math
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window is not None:
+        valid &= k_pos > q_pos - window
+    s = jnp.where(valid[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(
+        q.dtype)

@@ -1,0 +1,262 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) we derive, with TPU v5e constants:
+
+    compute term    = HLO_FLOPs   / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes   / (chips x 819 GB/s)
+    collective term = wire_bytes  / (chips x 50 GB/s/link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. XLA counts a
+``while`` body ONCE, so scanned-layer programs are corrected layerwise: the
+caller also lowers a single-superblock step and we add (repeats-1) x its
+cost (DESIGN.md §6).
+
+Wire bytes are parsed from the HLO text: every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute contributes its ring-
+algorithm per-chip wire volume, with replica-group sizes parsed per op and
+while-body ops multiplied by the trip count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.core import hw
+
+PEAK_FLOPS = hw.TPU_V5E.peak_flops          # 197e12 bf16
+HBM_BW = hw.TPU_V5E.mem_bw                  # 819e9
+LINK_BW = hw.ICI_LINK.bw                    # 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+# e.g.:  %ag = bf16[2,128]{1,0} all-gather(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        g = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(g), 1)
+    return default
+
+
+def _wire_bytes(kind: str, nbytes: float, p: int) -> float:
+    """Per-chip ring wire volume for one collective of output size nbytes."""
+    if p <= 1:
+        return 0.0
+    if kind.startswith("all-reduce"):
+        return 2.0 * nbytes * (p - 1) / p
+    if kind.startswith("all-gather"):
+        return nbytes * (p - 1) / p            # nbytes == gathered output
+    if kind == "reduce-scatter":
+        return nbytes * (p - 1)                 # nbytes == scattered output
+    if kind == "all-to-all":
+        return nbytes * (p - 1) / p
+    if kind.startswith("collective-permute"):
+        return nbytes
+    return 0.0
+
+
+def _computation_spans(text: str) -> dict:
+    """Map computation name -> [start, end) line span in the HLO text."""
+    lines = text.splitlines()
+    spans = {}
+    cur, start = None, 0
+    for i, l in enumerate(lines):
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", l)
+        if m and ("{" in l or (i + 1 < len(lines) and lines[i + 1].strip() == "{")):
+            if cur is not None:
+                spans[cur] = (start, i)
+            cur, start = m.group(1), i
+    if cur is not None:
+        spans[cur] = (start, len(lines))
+    return spans
+
+
+def _while_bodies(text: str) -> set:
+    """Names of computations used as while bodies (and their conditions)."""
+    out = set()
+    for m in re.finditer(r"body=%?([\w.\-]+)", text):
+        out.add(m.group(1))
+    return out
+
+
+def _reachable(text: str, spans: dict, roots: set) -> set:
+    """Computations reachable from `roots` via calls/fusion references."""
+    lines = text.splitlines()
+    names = set(spans)
+    out = set()
+    work = list(roots)
+    while work:
+        r = work.pop()
+        if r in out or r not in spans:
+            continue
+        out.add(r)
+        s, e = spans[r]
+        body = "\n".join(lines[s:e])
+        for m in re.finditer(r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)",
+                             body):
+            if m.group(1) in names:
+                work.append(m.group(1))
+    return out
+
+
+def _loop_depths(hlo_text: str, spans: dict) -> dict:
+    """Loop-nesting depth per computation (0 == not inside any while body).
+
+    Built from `body=`/`condition=` edges (depth+1) and plain call/fusion
+    edges (same depth), iterated to fixpoint."""
+    lines = hlo_text.splitlines()
+    # collect edges: (caller_comp, callee_comp, is_loop_entry)
+    line_comp = {}
+    for name, (st, en) in spans.items():
+        for i in range(st, en):
+            line_comp[i] = name
+    edges = []
+    for i, line in enumerate(lines):
+        caller = line_comp.get(i)
+        if caller is None:
+            continue
+        for m in re.finditer(r"(body=|condition=|calls=|to_apply=)"
+                             r"%?([\w.\-]+)", line):
+            kind, callee = m.groups()
+            if callee in spans:
+                edges.append((caller, callee,
+                              kind in ("body=", "condition=")))
+    depth = {name: 0 for name in spans}
+    for _ in range(32):                      # fixpoint over nesting levels
+        changed = False
+        for caller, callee, is_loop in edges:
+            d = depth.get(caller, 0) + (1 if is_loop else 0)
+            if d > depth.get(callee, 0):
+                depth[callee] = d
+                changed = True
+        if not changed:
+            break
+    return depth
+
+
+def collective_wire_bytes(hlo_text: str, *, n_chips: int,
+                          loop_mult: float = 1.0,
+                          outer_mult: float = 1.0) -> dict:
+    """Sum per-chip wire bytes by collective kind.
+
+    Trip counts by loop-nesting depth: depth-1 while bodies get
+    `outer_mult` (the accumulation loop when present, else `loop_mult`);
+    depth>=2 bodies get `outer_mult * loop_mult` (layer scan nested inside
+    the accumulation scan). With no accumulation, outer_mult == 1 and any
+    loop depth gets `loop_mult` (the layer scan)."""
+    spans = _computation_spans(hlo_text)
+    depth = _loop_depths(hlo_text, spans)
+    lines = hlo_text.splitlines()
+    line_comp = {}
+    for name, (st, en) in spans.items():
+        for i in range(st, en):
+            line_comp[i] = name
+    has_outer = outer_mult > 1.0
+    totals: dict = {k: 0.0 for k in _COLL}
+    counts: dict = {k: 0 for k in _COLL}
+    for i, line in enumerate(lines):
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        base = next(k for k in _COLL if kind.startswith(k))
+        nbytes = _shape_bytes(dtype, dims)
+        p = _group_size(line, n_chips)
+        d = depth.get(line_comp.get(i), 0)
+        if d == 0:
+            mult = 1.0
+        elif has_outer:
+            mult = outer_mult if d == 1 else outer_mult * loop_mult
+        else:
+            mult = loop_mult
+        totals[base] += _wire_bytes(kind, nbytes, p) * mult
+        counts[base] += 1
+    totals["_counts"] = counts
+    return totals
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # whole-program, loop-corrected, global
+    hlo_bytes: float
+    wire_bytes: float           # per-chip
+    model_flops: float          # 6*N(active)*D
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    useful_ratio: float
+    by_kind: dict
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, chips: int,
+            cost_full: dict, cost_block: Optional[dict], repeats: int,
+            hlo_text: str, model_flops: float, accum: int = 1,
+            extra_block_collectives: bool = True) -> Roofline:
+    """Assemble roofline terms (see module docstring for the methodology)."""
+    flops = float(cost_full.get("flops", 0.0))
+    bts = float(cost_full.get("bytes accessed", 0.0))
+    # cost_block is lowered at the MICROBATCH size; whole-program totals add
+    # (accum * repeats - 1) of it on top of the once-counted loop bodies.
+    n_blocks_total = repeats * max(accum, 1)
+    if cost_block is not None and n_blocks_total > 1:
+        flops += (n_blocks_total - 1) * float(cost_block.get("flops", 0.0))
+        bts += (n_blocks_total - 1) * float(cost_block.get("bytes accessed",
+                                                           0.0))
+    colls = collective_wire_bytes(hlo_text, n_chips=chips,
+                                  loop_mult=float(repeats),
+                                  outer_mult=float(max(accum, 1)))
+    wire = sum(v for k, v in colls.items() if not k.startswith("_"))
+    # cost_analysis on an SPMD-partitioned executable reports PER-CHIP flops
+    # and bytes (verified against per-chip parameter/optimizer footprints);
+    # wire bytes from the partitioned HLO are likewise per-chip. So every
+    # term is per-chip seconds directly -- equivalent to the brief's
+    # global/(chips * rate) formulation.
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bts / HBM_BW
+    t_coll = wire / LINK_BW
+    dom = max((("compute", t_comp), ("memory", t_mem),
+               ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops, hlo_bytes=bts, wire_bytes=wire,
+                    model_flops=model_flops, t_compute=t_comp, t_memory=t_mem,
+                    t_collective=t_coll, dominant=dom,
+                    useful_ratio=(model_flops / (flops * chips)
+                                  if flops else 0.0),
+                    by_kind={k: v for k, v in colls.items()
+                             if not k.startswith("_")} |
+                            {"_counts": colls["_counts"]})

@@ -1,0 +1,99 @@
+"""Training driver.
+
+Runs real training on whatever devices exist (CPU here; the same code path
+drives TPU meshes), with the MLSL comm stack selectable from the CLI:
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 50 --comm mlsl --wire int8 --batch 8 --seq 64
+
+--smoke uses the reduced config of the same family; full configs are for
+real hardware (the dry-run covers them at mesh scale).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs import registry
+from repro.core.planner import Planner
+from repro.data import pipeline
+from repro.launch import mesh as mesh_lib
+from repro.models.transformer import Batch, Model
+from repro.optim import optimizers as opt_lib, schedules
+from repro.train import trainer as tr
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS, default="yi-6b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=sorted(opt_lib.OPTIMIZERS))
+    ap.add_argument("--comm", default="gspmd", choices=["gspmd", "mlsl"])
+    ap.add_argument("--wire", default="fp32", choices=["fp32", "bf16", "int8"])
+    ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--no-prioritize", action="store_true")
+    ap.add_argument("--data-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (registry.get_smoke_config(args.arch) if args.smoke
+           else registry.get_config(args.arch))
+    model = Model(cfg)
+    mesh = mesh_lib.make_host_mesh(args.data_parallel, args.model_parallel)
+    planner = Planner(mesh=mesh)
+    lr = schedules.warmup_cosine(args.lr, max(args.steps // 10, 1), args.steps)
+    optimizer = opt_lib.make_optimizer(args.optimizer, lr)
+    comm = tr.CommConfig(mode=args.comm, wire=args.wire,
+                         prioritize=not args.no_prioritize,
+                         error_feedback=args.error_feedback)
+    dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                               global_batch=args.batch, seed=args.seed)
+
+    with jax.set_mesh(mesh):
+        state = tr.make_train_state(model, optimizer,
+                                    jax.random.PRNGKey(args.seed))
+        step_fn = jax.jit(tr.make_train_step(model, optimizer, mesh, planner,
+                                             comm))
+        print(f"arch={cfg.name} params={model.n_params():,} comm={args.comm}"
+              f"/{args.wire} mesh={dict(mesh.shape)}")
+        t0 = time.time()
+        for s, raw in enumerate(pipeline.iterate(dcfg, args.steps)):
+            kw = {}
+            if cfg.vlm_img_tokens:
+                kw["img_embeds"] = jnp.zeros(
+                    (args.batch, cfg.vlm_img_tokens, cfg.vlm_d_vision),
+                    jnp.float32)
+            if cfg.encoder is not None:
+                kw["frame_embeds"] = jnp.zeros(
+                    (args.batch, cfg.encoder.n_frames, cfg.encoder.d_input),
+                    jnp.float32)
+            batch = Batch(tokens=jnp.asarray(raw["tokens"]),
+                          labels=jnp.asarray(raw["labels"]), **kw)
+            state, metrics = step_fn(state, batch)
+            if s % args.log_every == 0 or s == args.steps - 1:
+                print(f"step {s:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({time.time() - t0:.1f}s)", flush=True)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, {"params": state.params}, step=args.steps)
+        print(f"checkpoint -> {args.ckpt_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

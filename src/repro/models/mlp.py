@@ -1,0 +1,27 @@
+"""Dense MLPs (gated SwiGLU/GeGLU and plain 2-matrix)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import planner as pl
+from repro.models import common
+
+
+def mlp_defs(d_model: int, d_ff: int, dtype, *, gated: bool = True) -> dict:
+    d = {
+        "w1": pl.ParamDef((d_model, d_ff), pl.K_PROJ_IN, dtype),
+        "w2": pl.ParamDef((d_ff, d_model), pl.K_PROJ_OUT, dtype),
+    }
+    if gated:
+        d["w3"] = pl.ParamDef((d_model, d_ff), pl.K_PROJ_IN, dtype)
+    return d
+
+
+def mlp_apply(p: dict, x: jax.Array, *, act: str = "silu",
+              gated: bool = True) -> jax.Array:
+    f = common.act_fn(act)
+    h = f(x @ p["w1"])
+    if gated:
+        h = h * (x @ p["w3"])
+    return h @ p["w2"]

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) with
+input-gated decay a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)) is a
+first-order linear recurrence, computed over full sequences with
+jax.lax.associative_scan (log-depth, shardable) and as an O(1) step at
+decode time. Combined with a width-4 causal conv and a gated-GeLU branch as
+in the Griffin recurrent block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.core import planner as pl
+from repro.models.ssm import _causal_conv, _conv_step
+
+
+def rglru_defs(d_model: int, r: RGLRUConfig, dtype) -> dict:
+    w = r.lru_width
+    return {
+        "w_in": pl.ParamDef((d_model, w), pl.K_PROJ_IN, dtype),
+        "w_gate": pl.ParamDef((d_model, w), pl.K_PROJ_IN, dtype),
+        "conv": pl.ParamDef((w, r.conv_width), pl.K_CONV_MODEL, dtype,
+                            init="scaled", init_scale=0.5),
+        # per-channel recurrence parameters (sharded with the channel dim)
+        "w_a": pl.ParamDef((w, w), pl.K_REPLICATED, dtype,
+                           init="scaled", init_scale=0.02),
+        "b_a": pl.ParamDef((w,), pl.K_VEC_MODEL, jnp.float32, init="zeros"),
+        "w_i": pl.ParamDef((w, w), pl.K_REPLICATED, dtype,
+                           init="scaled", init_scale=0.02),
+        "b_i": pl.ParamDef((w,), pl.K_VEC_MODEL, jnp.float32, init="zeros"),
+        "lam": pl.ParamDef((w,), pl.K_VEC_MODEL, jnp.float32, init="ones"),
+        "w_out": pl.ParamDef((w, d_model), pl.K_PROJ_OUT, dtype),
+    }
+
+
+def _gates(p: dict, x: jax.Array, r: RGLRUConfig):
+    """x (..., w) post-conv branch input -> (a, gated_input) in f32."""
+    xf = x.astype(jnp.float32)
+    rt = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    it = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -r.c_constant * jax.nn.softplus(p["lam"]) * rt
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (it * xf)
+    return a, b
+
+
+def rglru_apply(p: dict, x: jax.Array, r: RGLRUConfig) -> jax.Array:
+    """Full-sequence forward. x (B, S, d_model)."""
+    u = _causal_conv(x @ p["w_in"], p["conv"])
+    a, b = _gates(p, u, r)
+
+    def combine(l, rr):
+        a1, b1 = l
+        a2, b2 = rr
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32))
+    y = (h * gate).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+def rglru_init_cache(batch: int, r: RGLRUConfig, dtype) -> dict:
+    return {
+        "h": jnp.zeros((batch, r.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, r.conv_width - 1, r.lru_width), dtype),
+    }
+
+
+def rglru_prefill_cache(p: dict, x: jax.Array, r: RGLRUConfig) -> dict:
+    pre = x @ p["w_in"]
+    u = _causal_conv(pre, p["conv"])
+    a, b = _gates(p, u, r)
+
+    def combine(l, rr):
+        a1, b1 = l
+        a2, b2 = rr
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return {"h": h[:, -1, :], "conv": pre[:, -(r.conv_width - 1):, :]}
+
+
+def rglru_decode(p: dict, x1: jax.Array, cache: dict, r: RGLRUConfig):
+    """One step. x1 (B, 1, d_model)."""
+    x = x1[:, 0, :]
+    u, conv = _conv_step(x @ p["w_in"], cache["conv"], p["conv"])
+    a, b = _gates(p, u, r)
+    h = a * cache["h"] + b
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32))
+    y = (h * gate).astype(x.dtype) @ p["w_out"]
+    return y[:, None, :], {"h": h, "conv": conv}

@@ -1,0 +1,229 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks + a linear recurrence over chunk states. Decode is
+the O(1)-state recurrent step, which is what makes the 524k-token decode
+shape natural for this family.
+
+Sharding: heads (and the d_inner channel dim) shard over the `model` axis;
+B/C projections are group-shared (G=1 here) and replicated, mirroring how
+GQA replicates KV heads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.core import planner as pl
+from repro.models import common
+
+
+def ssm_defs(d_model: int, s: SSMConfig, dtype) -> dict:
+    d_inner = s.expand * d_model
+    H = d_inner // s.head_dim
+    GN = s.n_groups * s.d_state
+    return {
+        "w_z": pl.ParamDef((d_model, d_inner), pl.K_PROJ_IN, dtype),
+        "w_x": pl.ParamDef((d_model, d_inner), pl.K_PROJ_IN, dtype),
+        "w_B": pl.ParamDef((d_model, GN), pl.K_REPLICATED, dtype),
+        "w_C": pl.ParamDef((d_model, GN), pl.K_REPLICATED, dtype),
+        "w_dt": pl.ParamDef((d_model, H), pl.K_PROJ_IN, dtype),
+        "conv_x": pl.ParamDef((d_inner, s.conv_width), pl.K_CONV_MODEL, dtype,
+                              init="scaled", init_scale=0.5),
+        "conv_B": pl.ParamDef((GN, s.conv_width), pl.K_REPLICATED, dtype,
+                              init="scaled", init_scale=0.5),
+        "conv_C": pl.ParamDef((GN, s.conv_width), pl.K_REPLICATED, dtype,
+                              init="scaled", init_scale=0.5),
+        "A_log": pl.ParamDef((H,), pl.K_VEC_MODEL, jnp.float32, init="zeros"),
+        "D": pl.ParamDef((H,), pl.K_VEC_MODEL, jnp.float32, init="ones"),
+        "dt_bias": pl.ParamDef((H,), pl.K_VEC_MODEL, jnp.float32, init="zeros"),
+        "norm": pl.ParamDef((d_inner,), pl.K_VEC_MODEL, dtype, init="ones"),
+        "w_out": pl.ParamDef((d_inner, d_model), pl.K_PROJ_OUT, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, S, C), w (C, W)."""
+    W = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    parts = [xp[:, i: i + x.shape[1], :] * w[None, None, :, i]
+             for i in range(W)]
+    return sum(parts)
+
+
+def _conv_step(x1: jax.Array, conv_state: jax.Array, w: jax.Array):
+    """x1 (B, C); conv_state (B, W-1, C) holding the previous inputs."""
+    full = jnp.concatenate([conv_state, x1[:, None, :]], axis=1)   # (B, W, C)
+    y = jnp.einsum("bwc,cw->bc", full, w)
+    return y, full[:, 1:, :]
+
+
+def _ssd_chunked(xdt, a, Bm, Cm, s: SSMConfig, init_state=None):
+    """Chunked SSD.
+
+    xdt (B,S,H,P)  -- inputs already scaled by dt
+    a   (B,S,H)    -- log decay per step (dt * A, negative)
+    Bm, Cm (B,S,G,N)
+    Returns y (B,S,H,P), final_state (B,H,P,N).
+    """
+    Bsz, S, H, Pd = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(s.chunk, S)
+    S_orig = S
+    if S % Q:
+        # pad to a whole number of chunks: zero inputs with zero log-decay
+        # (exp(0)=1) leave the final state untouched and the kept outputs
+        # unchanged.
+        padn = Q - S % Q
+        pad = lambda t: jnp.pad(t, [(0, 0), (0, padn)] +
+                                [(0, 0)] * (t.ndim - 2))
+        xdt, a, Bm, Cm = pad(xdt), pad(a), pad(Bm), pad(Cm)
+        S = S + padn
+    nc = S // Q
+    rep = H // G
+
+    def cs(t):      # (B,S,...) -> (B,nc,Q,...)
+        return t.reshape(Bsz, nc, Q, *t.shape[2:])
+
+    x_, a_, B_, C_ = cs(xdt), cs(a.astype(jnp.float32)), cs(Bm), cs(Cm)
+    B_h = jnp.repeat(B_, rep, axis=3)          # (B,nc,Q,H,N)
+    C_h = jnp.repeat(C_, rep, axis=3)
+    acum = jnp.cumsum(a_, axis=2)              # (B,nc,Q,H)
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    # L[i,j] = exp(acum_i - acum_j) for j <= i
+    diff = acum[:, :, :, None, :] - acum[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", C_h, B_h).astype(jnp.float32)
+    y_diag = jnp.einsum("bcqkh,bcqkh,bckhp->bcqhp", scores, L,
+                        x_.astype(jnp.float32))
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)        # (B,nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", B_h,
+                        decay_to_end.astype(jnp.float32),
+                        x_.astype(jnp.float32))              # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(acum[:, :, -1, :])                 # (B,nc,H)
+
+    # --- inter-chunk recurrence over nc (linear scan) ---
+    if init_state is None:
+        init = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    else:
+        init = init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st, dc = inp                       # (B,H,N,P), (B,H)
+        prev = carry
+        new = prev * dc[:, :, None, None] + st
+        return new, prev                   # emit state ENTERING the chunk
+
+    xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2))
+    final, prev_states = jax.lax.scan(step, init, xs)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B,nc,H,N,P)
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(acum)                                 # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp", C_h,
+                       in_decay.astype(jnp.float32), prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)[:, :S_orig]
+    return y.astype(xdt.dtype), final
+
+
+def ssm_apply(p: dict, u: jax.Array, s: SSMConfig, *, act: str = "silu"):
+    """Full-sequence forward. u (B, S, d_model) -> (B, S, d_model)."""
+    B_, S, d_model = u.shape
+    d_inner = s.expand * d_model
+    H = d_inner // s.head_dim
+    G, N = s.n_groups, s.d_state
+    z = u @ p["w_z"]
+    x = _causal_conv(u @ p["w_x"], p["conv_x"])
+    Bm = _causal_conv(u @ p["w_B"], p["conv_B"])
+    Cm = _causal_conv(u @ p["w_C"], p["conv_C"])
+    x, Bm, Cm = jax.nn.silu(x), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                      # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+    xh = x.reshape(B_, S, H, s.head_dim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    a = dt * A
+    y, _ = _ssd_chunked(xdt, a, Bm.reshape(B_, S, G, N),
+                        Cm.reshape(B_, S, G, N), s)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = common.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["w_out"]
+
+
+def ssm_init_cache(batch: int, d_model: int, s: SSMConfig, dtype) -> dict:
+    d_inner = s.expand * d_model
+    H = d_inner // s.head_dim
+    GN = s.n_groups * s.d_state
+    W = s.conv_width
+    return {
+        "state": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+        "conv_x": jnp.zeros((batch, W - 1, d_inner), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, GN), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, GN), dtype),
+    }
+
+
+def ssm_prefill_cache(p: dict, u: jax.Array, s: SSMConfig) -> dict:
+    """Run the chunked scan and keep the final state + conv tails."""
+    B_, S, d_model = u.shape
+    d_inner = s.expand * d_model
+    H = d_inner // s.head_dim
+    G, N = s.n_groups, s.d_state
+    xr = u @ p["w_x"]
+    Br = u @ p["w_B"]
+    Cr = u @ p["w_C"]
+    x = jax.nn.silu(_causal_conv(xr, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Br, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Cr, p["conv_C"]))
+    dt = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B_, S, H, s.head_dim)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    _, final = _ssd_chunked(xdt, dt * A, Bm.reshape(B_, S, G, N),
+                            Cm.reshape(B_, S, G, N), s)
+    W = s.conv_width
+    return {
+        "state": final,                                      # (B,H,N,P)
+        "conv_x": xr[:, -(W - 1):, :],
+        "conv_B": Br[:, -(W - 1):, :],
+        "conv_C": Cr[:, -(W - 1):, :],
+    }
+
+
+def ssm_decode(p: dict, u1: jax.Array, cache: dict, s: SSMConfig):
+    """One recurrent step. u1 (B, 1, d_model)."""
+    B_, _, d_model = u1.shape
+    d_inner = s.expand * d_model
+    H = d_inner // s.head_dim
+    G, N = s.n_groups, s.d_state
+    u = u1[:, 0, :]
+    z = u @ p["w_z"]
+    xr, Br, Cr = u @ p["w_x"], u @ p["w_B"], u @ p["w_C"]
+    x, conv_x = _conv_step(xr, cache["conv_x"], p["conv_x"])
+    Bm, conv_B = _conv_step(Br, cache["conv_B"], p["conv_B"])
+    Cm, conv_C = _conv_step(Cr, cache["conv_C"], p["conv_C"])
+    x, Bm, Cm = jax.nn.silu(x), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+    xh = x.reshape(B_, H, s.head_dim).astype(jnp.float32)
+    dt_ = dt                                                  # (B,H)
+    Bh = jnp.repeat(Bm.reshape(B_, G, N), H // G, axis=1)     # (B,H,N)
+    Ch = jnp.repeat(Cm.reshape(B_, G, N), H // G, axis=1)
+    decay = jnp.exp(dt_ * A)                                  # (B,H)
+    state = cache["state"]                                    # (B,H,N,P)
+    state = (state * decay[:, :, None, None]
+             + jnp.einsum("bhn,bh,bhp->bhnp", Bh.astype(jnp.float32), dt_, xh))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B_, d_inner).astype(u.dtype)
+    y = common.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    y1 = (y @ p["w_out"])[:, None, :]
+    return y1, {"state": state, "conv_x": conv_x, "conv_B": conv_B,
+                "conv_C": conv_C}

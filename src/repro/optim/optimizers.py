@@ -1,0 +1,198 @@
+"""Optimizers, built in-tree (no optax dependency): SGD-momentum, AdamW, and
+the layerwise large-batch optimizers LARS/LAMB.
+
+Large-batch training is a pillar of the paper's scaling argument (C3: the
+compute-to-communication ratio is proportional to the mini-batch, so
+efficient scale-out REQUIRES large global batches, which in turn require
+layerwise-adaptive optimizers to retain accuracy -- paper refs [6, 11, 18]).
+
+All optimizers share one interface:
+    opt = adamw(lr=..., ...)
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params, step)
+`lr` may be a float or a schedule fn step -> float (see repro.optim.schedules).
+`state_dtype` lets giant models keep moments in bf16 (memory-driven; the
+planner's HBM budget reasoning in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable          # (grads, state, params, step) -> (params, state)
+    state_bytes_per_param: float
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def _cast(x, dtype):
+    return x.astype(dtype) if dtype is not None else x
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def sgd_momentum(lr, momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, state_dtype), params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+
+        def one(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu.astype(jnp.float32) + g
+            d = g + momentum * mu_new if nesterov else mu_new
+            return ((p.astype(jnp.float32) - lr_t * d).astype(p.dtype),
+                    _cast(mu_new, state_dtype))
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["mu"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [one(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        unf = lambda i: jax.tree_util.tree_unflatten(
+            treedef, [o[i] for o in outs])
+        return unf(0), {"mu": unf(1)}
+
+    return Optimizer(init, update,
+                     state_bytes_per_param=jnp.dtype(state_dtype).itemsize)
+
+
+def _adam_moments(g, m, v, b1, b2):
+    g = g.astype(jnp.float32)
+    m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+    v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+    return m_new, v_new
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        c1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+        c2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+        def one(g, m, v, p):
+            m_new, v_new = _adam_moments(g, m, v, b1, b2)
+            upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * upd).astype(p.dtype),
+                    _cast(m_new, state_dtype), _cast(v_new, state_dtype))
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [one(g, m, v, p) for g, m, v, p
+                in zip(flat_g, flat_m, flat_v, flat_p)]
+        unf = lambda i: jax.tree_util.tree_unflatten(
+            treedef, [o[i] for o in outs])
+        return unf(0), {"m": unf(1), "v": unf(2)}
+
+    return Optimizer(init, update,
+                     state_bytes_per_param=2 * jnp.dtype(state_dtype).itemsize)
+
+
+def _trust_ratio(p, upd, eps: float = 1e-9) -> jax.Array:
+    wn = jnp.linalg.norm(p.astype(jnp.float32).reshape(-1))
+    un = jnp.linalg.norm(upd.reshape(-1))
+    ratio = jnp.where((wn > 0) & (un > 0), wn / (un + eps), 1.0)
+    return ratio
+
+
+def lars(lr, momentum: float = 0.9, weight_decay: float = 1e-4,
+         trust_coeff: float = 0.001, state_dtype=jnp.float32) -> Optimizer:
+    """Layerwise Adaptive Rate Scaling (You et al.) for large-batch SGD."""
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, state_dtype), params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+
+        def one(g, mu, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            local = trust_coeff * _trust_ratio(p, g)
+            mu_new = momentum * mu.astype(jnp.float32) + local * lr_t * g
+            return ((p.astype(jnp.float32) - mu_new).astype(p.dtype),
+                    _cast(mu_new, state_dtype))
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["mu"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [one(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        unf = lambda i: jax.tree_util.tree_unflatten(
+            treedef, [o[i] for o in outs])
+        return unf(0), {"mu": unf(1)}
+
+    return Optimizer(init, update,
+                     state_bytes_per_param=jnp.dtype(state_dtype).itemsize)
+
+
+def lamb(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
+         weight_decay: float = 0.01, state_dtype=jnp.float32) -> Optimizer:
+    """LAMB (You et al.): layerwise-adaptive AdamW for large-batch training."""
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        c1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+        c2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+        def one(g, m, v, p):
+            m_new, v_new = _adam_moments(g, m, v, b1, b2)
+            upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            ratio = _trust_ratio(p, upd)
+            return ((p.astype(jnp.float32) - lr_t * ratio * upd).astype(p.dtype),
+                    _cast(m_new, state_dtype), _cast(v_new, state_dtype))
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [one(g, m, v, p) for g, m, v, p
+                in zip(flat_g, flat_m, flat_v, flat_p)]
+        unf = lambda i: jax.tree_util.tree_unflatten(
+            treedef, [o[i] for o in outs])
+        return unf(0), {"m": unf(1), "v": unf(2)}
+
+    return Optimizer(init, update,
+                     state_bytes_per_param=2 * jnp.dtype(state_dtype).itemsize)
+
+
+OPTIMIZERS = {"sgd": sgd_momentum, "adamw": adamw, "lars": lars, "lamb": lamb}
+
+
+def make_optimizer(name: str, lr, *, state_dtype=jnp.float32, **kw) -> Optimizer:
+    return OPTIMIZERS[name](lr, state_dtype=state_dtype, **kw)

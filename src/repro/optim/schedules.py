@@ -1,0 +1,39 @@
+"""Learning-rate schedules (warmup + cosine/linear; large-batch friendly)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.asarray(step, jnp.float32)
+        warm = peak * (step + 1) / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def warmup_linear(peak: float, warmup_steps: int, total_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * (step + 1) / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, peak * (1 - t))
+    return fn
+
+
+def linear_batch_scaled(base_lr: float, base_batch: int, batch: int):
+    """Goyal et al. linear scaling rule: lr grows with the global batch --
+    the optimizer-side half of the paper's large-batch scaling argument."""
+    return base_lr * batch / base_batch

@@ -1,0 +1,95 @@
+"""Serving engine: batched prefill + greedy/temperature decode loops.
+
+The jitted step functions are shared with the dry-run (launch/dryrun.py
+lowers exactly these); the Engine adds the host-side loop, sampling, and a
+simple batched-request front end used by examples/serve_batched.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Batch, Model
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_seq: int = 1024
+    temperature: float = 0.0          # 0 => greedy
+    long_context: bool = False        # use the SWA long-context variant
+    kv_dtype: str = "native"          # "int8": quantized KV cache
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: EngineConfig | None = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg or EngineConfig()
+        ctx_kw = {}
+        if self.cfg.long_context and model.cfg.arch_type in ("dense", "moe",
+                                                             "vlm"):
+            ctx_kw["window_override"] = model.cfg.long_context_window
+        if self.cfg.kv_dtype != "native":
+            ctx_kw["kv_dtype"] = self.cfg.kv_dtype
+        self._ctx_kw = ctx_kw
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, self.cfg.max_seq, **ctx_kw))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, **ctx_kw))
+
+    def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, n_new: int, *,
+                 img_embeds=None, frame_embeds=None,
+                 seed: int = 0) -> np.ndarray:
+        """prompts (B, S) int32 -> (B, n_new) generated tokens."""
+        B, S = prompts.shape
+        batch = Batch(tokens=jnp.asarray(prompts, jnp.int32),
+                      img_embeds=None if img_embeds is None
+                      else jnp.asarray(img_embeds),
+                      frame_embeds=None if frame_embeds is None
+                      else jnp.asarray(frame_embeds))
+        logits, cache, pos = self._prefill(self.params, batch)
+        if self.model.cfg.vlm_img_tokens and img_embeds is not None:
+            pos = pos  # pos already counts image tokens via embed concat
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits, key)
+        for i in range(n_new):
+            out.append(np.asarray(tok))
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok[:, None],
+                                         jnp.int32(pos + i))
+            tok = self._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) int32
+    max_new: int
+    out: Optional[np.ndarray] = None
+
+
+def serve_requests(engine: Engine, requests: list, *, pad_id: int = 0):
+    """Minimal batched serving: left-pad prompts to a common length, decode
+    max(max_new) steps, slice per-request outputs."""
+    S = max(len(r.prompt) for r in requests)
+    n_new = max(r.max_new for r in requests)
+    B = len(requests)
+    toks = np.full((B, S), pad_id, np.int32)
+    for i, r in enumerate(requests):
+        toks[i, S - len(r.prompt):] = r.prompt
+    gen = engine.generate(toks, n_new)
+    for i, r in enumerate(requests):
+        r.out = gen[i, : r.max_new]
+    return requests

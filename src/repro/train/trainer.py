@@ -1,0 +1,306 @@
+"""Training step factory: forward/backward + MLSL communication + optimizer.
+
+Two first-class communication modes (DESIGN.md §4):
+
+  * ``gspmd``  -- the baseline: pjit with partitioner-inserted gradient
+    reductions; the priority scheduler contributes bucket ordering barriers
+    between the gradients and the optimizer.
+
+  * ``mlsl``   -- the paper's data path: the whole step runs inside a
+    shard_map that is MANUAL over the batch ("pod"/"data") axes and AUTO over
+    the model axis. Per-device gradients are fused into priority buckets and
+    reduced explicitly through repro.core.collectives with a selectable wire
+    precision (fp32 / bf16 / int8 with optional error feedback). First-layer
+    buckets are chained ahead of bulk buckets, reproducing MLSL's message
+    prioritization in the compiled HLO.
+
+The returned step function is `jax.jit`-compatible with sharded TrainState /
+Batch and is what launch/train.py, the dry-run, and the tests all use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import collectives, scheduler
+from repro.core.planner import Planner
+from repro.models.transformer import Batch, Model
+from repro.optim import optimizers as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    mode: str = "gspmd"              # gspmd | mlsl
+    wire: str = collectives.WIRE_FP32
+    prioritize: bool = True
+    bucket_bytes: float = 25e6
+    error_feedback: bool = False     # int8 wire only
+    moe_impl: str = "gather"         # gather | ep  (expert-parallel a2a)
+    accum_steps: int = 1             # microbatch gradient accumulation
+    kv_chunk: int = 0                # >0: online-softmax attention chunking
+    wgather_wire: str = "bf16"       # int8: quantized ZeRO weight gathers (ep)
+    kv_dtype: str = "native"         # int8: quantized GQA KV cache (serving)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    comm_residuals: Any = None       # error-feedback residuals per bucket
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt_state", "step", "comm_residuals"],
+    meta_fields=[])
+
+
+def make_train_state(model: Model, optimizer: opt_lib.Optimizer,
+                     key: jax.Array) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _layer_index_fn():
+    return scheduler.default_layer_index
+
+
+def _batch_specs(planner: Planner, model: Model, batch_size: int) -> Batch:
+    cfg = model.cfg
+    tok = planner.tokens_spec(batch_size, extra_dims=1)
+    three = planner.tokens_spec(batch_size, extra_dims=2)
+    return Batch(
+        tokens=tok, labels=tok, mask=None,
+        img_embeds=three if cfg.vlm_img_tokens else None,
+        frame_embeds=three if cfg.encoder is not None else None)
+
+
+def state_shardings(planner: Planner, model: Model,
+                    optimizer: opt_lib.Optimizer) -> TrainState:
+    """PartitionSpec tree for TrainState (opt state mirrors params)."""
+    defs = model.param_defs()
+    pspecs = planner.tree_specs(defs, stacked_paths=Model.stacked_path)
+    params_shape = jax.eval_shape(lambda: jax.tree_util.tree_map(
+        lambda pd: jnp.zeros(pd.shape, pd.dtype), defs, is_leaf=_is_pd))
+    opt_shape = jax.eval_shape(optimizer.init, params_shape)
+    # all in-tree optimizers keep {name: params-shaped tree} states
+    opt_specs = {k: pspecs for k in opt_shape}
+    return TrainState(params=pspecs, opt_state=opt_specs,
+                      step=P(), comm_residuals=None)
+
+
+def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
+                    planner: Planner, comm: CommConfig,
+                    *, grad_clip: float = 1.0):
+    """Returns (train_step(state, batch) -> (state, metrics), specs dict)."""
+    cfg = model.cfg
+    data_axes = planner.batch_axes
+    fsdp_axes = planner.batch_axes if planner.fsdp else ()
+
+    loss_kw = dict(moe_impl=comm.moe_impl, mesh=mesh,
+                   batch_axes=data_axes, fsdp_axes=fsdp_axes,
+                   wgather_wire=comm.wgather_wire) \
+        if comm.moe_impl == "ep" else {}
+    if comm.kv_chunk:
+        loss_kw["kv_chunk"] = comm.kv_chunk
+
+    def loss_fn(params, batch: Batch):
+        return model.loss(params, batch, **loss_kw)
+
+    def grads_fn(params, batch: Batch):
+        """(loss, grads), microbatched over comm.accum_steps (C3: large
+        global batches at bounded activation memory)."""
+        if comm.accum_steps <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        acc = comm.accum_steps
+
+        def split(x):
+            assert x.shape[0] % acc == 0, (x.shape, acc)
+            return x.reshape(acc, x.shape[0] // acc, *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+        gz = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            gsum, lsum = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            gsum = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + loss), None
+
+        (gsum, lsum), _ = jax.lax.scan(body, (gz, jnp.zeros(())), micro)
+        grads = jax.tree_util.tree_map(
+            lambda g, pp: (g / acc).astype(pp.dtype), gsum, params)
+        return lsum / acc, grads
+
+    if comm.mode == "gspmd":
+        def train_step(state: TrainState, batch: Batch):
+            loss, grads = grads_fn(state.params, batch)
+            grads, gnorm = opt_lib.clip_by_global_norm(grads, grad_clip)
+            if comm.prioritize:
+                # barrier-chain only (fuse=False): under GSPMD the reductions
+                # are partitioner-inserted and fusing sharded leaves would
+                # force all-gathers (§Perf iteration A0)
+                plan = scheduler.plan_buckets(
+                    grads, _layer_index_fn(), bucket_bytes=comm.bucket_bytes)
+                grads = scheduler.reduce_with_priority(
+                    grads, lambda flat, b: flat, plan, prioritize=True,
+                    fuse=False)
+            params, opt_state = optimizer.update(grads, state.opt_state,
+                                                 state.params, state.step)
+            new = TrainState(params=params, opt_state=opt_state,
+                             step=state.step + 1,
+                             comm_residuals=state.comm_residuals)
+            return new, {"loss": loss, "grad_norm": gnorm}
+        return train_step
+
+    assert comm.mode == "mlsl", comm.mode
+    assert not planner.fsdp, ("comm=mlsl manages gradient communication "
+                              "explicitly and requires replicated (non-FSDP) "
+                              "parameters over the batch axes; use gspmd for "
+                              "ZeRO-sharded giants")
+
+    # Bucket plan is built from the (static) parameter structure.
+    grad_struct = jax.eval_shape(
+        lambda: jax.tree_util.tree_map(lambda pd: jnp.zeros(pd.shape,
+                                                            jnp.float32),
+                                       model.param_defs(),
+                                       is_leaf=_is_pd))
+    # fuse only within same-sharding groups: flattening a tensor that is
+    # sharded over the (auto) model axis would reshard it
+    pspecs = planner.tree_specs(model.param_defs(),
+                                stacked_paths=Model.stacked_path)
+    spec_by_path = {jax.tree_util.keystr(path): spec for path, spec in
+                    jax.tree_util.tree_leaves_with_path(
+                        pspecs, is_leaf=lambda x: isinstance(x, P))}
+
+    def group_key(path):
+        return str(spec_by_path.get(jax.tree_util.keystr(path), P()))
+
+    def leaf_replicated(path):
+        spec = spec_by_path.get(jax.tree_util.keystr(path), P())
+        return all(a is None for a in spec)
+
+    plan = scheduler.plan_buckets(grad_struct, _layer_index_fn(),
+                                  bucket_bytes=comm.bucket_bytes,
+                                  group_key=group_key)
+    # which buckets may be fused into a flat message: only fully-replicated
+    # leaves -- flattening a model-sharded gradient under the auto axis
+    # reshards it (all-gathers over the node group; §Perf iteration A0/C2)
+    leaf_paths = [path for path, _ in
+                  jax.tree_util.tree_leaves_with_path(grad_struct)]
+    bucket_fusable = tuple(
+        all(leaf_replicated(leaf_paths[i]) for i in b.leaf_ids)
+        for b in plan.buckets)
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+
+    use_ef = comm.error_feedback and comm.wire == collectives.WIRE_INT8
+
+    def init_residuals():
+        if not use_ef:
+            return None
+        return tuple(jnp.zeros(collectives.ef_residual_shape(b.n_elems, dp),
+                               jnp.float32) for b in plan.buckets)
+
+    def _reduce_buckets(grads, residuals):
+        """Fused, prioritized, wire-precision gradient exchange.
+
+        Replicated buckets travel as one fused flat message (MLSL message
+        fusion + optional int8 block quantization and error feedback).
+        Model-sharded buckets are reduced per-leaf, shape-preserving (no
+        resharding); the int8 wire's flatten/scatter composition would
+        reshard them, so those leaves use the bf16 wire instead."""
+        leaves = jax.tree_util.tree_leaves(grads)
+        new_leaves = list(leaves)
+        new_residuals = []
+        token = None
+        for bi, bucket in enumerate(plan.buckets):
+            if bucket_fusable[bi]:
+                flat = scheduler.fuse_bucket(leaves, bucket)
+                if comm.prioritize:
+                    flat, token = scheduler.chain_barrier(flat, token)
+                if use_ef:
+                    red, res = collectives.allreduce_ef(
+                        flat, residuals[bi], data_axes, mean=True)
+                    new_residuals.append(res)
+                else:
+                    red = collectives.allreduce(flat, data_axes,
+                                                wire=comm.wire, mean=True)
+                if comm.prioritize:
+                    token = scheduler._token_of(red)
+                for lid, leaf in scheduler.unfuse_bucket(red, bucket).items():
+                    new_leaves[lid] = leaf
+            else:
+                vals = [leaves[i] for i in bucket.leaf_ids]
+                if comm.prioritize:
+                    vals, token = scheduler.chain_barrier(vals, token)
+                wire = comm.wire if comm.wire != collectives.WIRE_INT8                     else collectives.WIRE_BF16
+                vals = [collectives.allreduce(v, data_axes, wire=wire,
+                                              mean=True) for v in vals]
+                if use_ef:
+                    new_residuals.append(residuals[bi])
+                if comm.prioritize:
+                    token = scheduler._token_of(vals[0])
+                for lid, leaf in zip(bucket.leaf_ids, vals):
+                    new_leaves[lid] = leaf
+        out = jax.tree_util.tree_unflatten(plan.treedef, new_leaves)
+        return out, (tuple(new_residuals) if use_ef else None)
+
+    # shard_map specs: manual over batch axes only; model axis stays auto.
+    bspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    replicated = P()
+
+    def inner(params, opt_state, step, residuals, batch: Batch):
+        # per-device local loss; gradient = d(local mean)/d(params)
+        loss, grads = grads_fn(params, batch)
+        grads, residuals = _reduce_buckets(grads, residuals)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, grad_clip)
+        loss = jax.lax.pmean(loss, data_axes)
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        return params, opt_state, residuals, loss, gnorm
+
+    params_specs = jax.tree_util.tree_map(lambda _: replicated,
+                                          grad_struct)
+    batch_in_specs = Batch(tokens=P(bspec), labels=P(bspec), mask=None,
+                           img_embeds=P(bspec) if cfg.vlm_img_tokens else None,
+                           frame_embeds=P(bspec) if cfg.encoder is not None
+                           else None)
+    res_spec = (tuple(P(bspec) for _ in plan.buckets) if use_ef else None)
+
+    def train_step(state: TrainState, batch: Batch):
+        opt_specs = jax.tree_util.tree_map(lambda _: replicated,
+                                           state.opt_state,
+                                           is_leaf=lambda x: x is None)
+        residuals = state.comm_residuals
+        if use_ef and residuals is None:
+            residuals = init_residuals()
+
+        out = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(params_specs, opt_specs, replicated, res_spec,
+                      batch_in_specs),
+            out_specs=(params_specs, opt_specs, res_spec, replicated,
+                       replicated),
+            axis_names=set(data_axes), check_vma=False,
+        )(state.params, state.opt_state, state.step, residuals, batch)
+        params, opt_state, residuals, loss, gnorm = out
+        new = TrainState(params=params, opt_state=opt_state,
+                         step=state.step + 1, comm_residuals=residuals)
+        return new, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def _is_pd(x):
+    from repro.core.planner import ParamDef
+    return isinstance(x, ParamDef)

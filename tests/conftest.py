@@ -1,0 +1,23 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def abstract_pod():
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def assert_one_device():
+    assert jax.device_count() == 1

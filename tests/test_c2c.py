@@ -1,0 +1,50 @@
+"""The paper's C2C-ratio claims (Section 'Design choices and insights')."""
+
+import math
+
+from repro.core import c2c, hw
+
+
+def test_data_parallel_ratio_proportional_to_batch():
+    l = c2c.conv_layer("c", 128, 256, 3, 28, 28)
+    r1 = c2c.data_parallel_ratio(l, 32, 64)
+    r2 = c2c.data_parallel_ratio(l, 64, 64)
+    assert abs(r2 / r1 - 2.0) < 1e-9
+
+
+def test_data_parallel_ratio_independent_of_kernel_feat_stride():
+    """Paper: 'it does not depend on the kernel size or number of
+    input/output feature maps or stride'."""
+    base = c2c.conv_layer("c", 256, 256, 3, 14, 14)
+    r0 = c2c.data_parallel_ratio(base, 64, 64)
+    for v in (c2c.conv_layer("c", 256, 256, 5, 14, 14),
+              c2c.conv_layer("c", 512, 1024, 3, 14, 14),
+              c2c.conv_layer("c", 64, 64, 7, 14, 14, stride=2)):
+        assert abs(c2c.data_parallel_ratio(v, 64, 64) - r0) < 1e-9 * r0
+
+
+def test_hybrid_extremes_match_pure_strategies():
+    """Group size 1 == data parallelism; group size p == model parallelism."""
+    l = c2c.fc_layer("fc", 4096, 4096)
+    p = 16
+    assert math.isclose(c2c.hybrid_ratio(l, 256, p, 1),
+                        c2c.data_parallel_ratio(l, 256, p), rel_tol=1e-9)
+    assert math.isclose(c2c.hybrid_ratio(l, 256, p, p),
+                        c2c.model_parallel_ratio(l, 256, p), rel_tol=1e-9)
+
+
+def test_strategy_chooser_conv_vs_fc():
+    """Conv layers (small weights, big activations) -> data parallel;
+    giant FC layers (big weights, small activations) -> model/hybrid."""
+    conv = c2c.conv_layer("c", 64, 64, 3, 56, 56)
+    fc = c2c.fc_layer("fc", 25088, 4096)
+    c_choice = c2c.choose_strategy(conv, batch=64, p=16)
+    f_choice = c2c.choose_strategy(fc, batch=64, p=16)
+    assert c_choice.strategy == c2c.Strategy.DATA
+    assert f_choice.group_size > 1
+
+
+def test_exposed_comm_upper_bound_positive():
+    layers = [c2c.conv_layer("c", 64, 64, 3, 56, 56)] * 4
+    t = c2c.exposed_comm_upper_bound(layers, 32, 16, hw.ETH_10G)
+    assert t > 0

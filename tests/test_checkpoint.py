@@ -1,0 +1,29 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "nest": {"b": jnp.ones((5,), jnp.bfloat16),
+                     "c": jnp.asarray([1, 2, 3], jnp.int32)},
+            "list": [jnp.zeros((2, 2)), jnp.full((1,), 7.0)]}
+    d = ckpt.save(str(tmp_path / "ck"), tree, step=42)
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out = ckpt.restore(d, like)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)), tree, out)
+    assert out["nest"]["b"].dtype == jnp.bfloat16
+    assert ckpt.latest_step(d) == 42
+
+
+def test_restore_onto_device(tmp_path):
+    tree = {"w": jnp.ones((8, 8))}
+    d = ckpt.save(str(tmp_path / "ck"), tree)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = ckpt.restore(d, tree, shardings={"w": sh})
+    assert out["w"].sharding == sh

@@ -1,0 +1,72 @@
+"""Per-kernel validation: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, quant8, ref
+
+SHAPES = [(8, 512), (16, 128), (64, 640), (8, 1024)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quantize_blocks_matches_ref(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(42), shape) * 3).astype(dtype)
+    x2 = x.astype(jnp.float32)
+    q_p, s_p = quant8.quantize_blocks(x2, interpret=True)
+    q_r, s_r = ref.quantize_blocks(x2)
+    # interpret-mode XLA may fuse the divide differently; allow 1-LSB
+    # rounding-tie differences on a tiny fraction of elements
+    diff = np.abs(np.asarray(q_p, np.int32) - np.asarray(q_r, np.int32))
+    assert diff.max() <= 1, diff.max()
+    assert (diff > 0).mean() < 0.01
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_dequantize_blocks_matches_ref(shape):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    q, s = ref.quantize_blocks(x)
+    d_p = quant8.dequantize_blocks(q, s, interpret=True)
+    d_r = ref.dequantize_blocks(q, s)
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:2])
+def test_dequant_accumulate_matches_ref(shape):
+    x = jax.random.normal(jax.random.PRNGKey(2), shape)
+    acc = jax.random.normal(jax.random.PRNGKey(3), shape)
+    q, s = ref.quantize_blocks(x)
+    a_p = quant8.dequantize_accumulate_blocks(q, s, acc, interpret=True)
+    a_r = ref.dequantize_accumulate_blocks(q, s, acc)
+    np.testing.assert_allclose(np.asarray(a_p), np.asarray(a_r), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 100, 511, 512, 4097, 70000])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_ops_roundtrip_arbitrary_sizes(n, backend):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 0.01
+    q, s, meta = ops.quantize(x, backend=backend)
+    xr = ops.dequantize(q, s, meta, backend=backend)
+    assert xr.shape == x.shape
+    # per-block error bound: |x - xr| <= scale/2 <= amax/(2*127)
+    amax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(x - xr))) <= amax / 127.0 + 1e-8
+
+
+def test_roundtrip_zeros_and_extremes():
+    for backend in ("jnp", "pallas"):
+        z = jnp.zeros((1000,))
+        q, s, meta = ops.quantize(z, backend=backend)
+        assert float(jnp.max(jnp.abs(ops.dequantize(q, s, meta,
+                                                    backend=backend)))) == 0.0
+        big = jnp.full((1000,), 1e20)
+        q, s, meta = ops.quantize(big, backend=backend)
+        np.testing.assert_allclose(
+            np.asarray(ops.dequantize(q, s, meta, backend=backend)),
+            np.asarray(big), rtol=1e-2)

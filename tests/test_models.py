@@ -1,0 +1,198 @@
+"""Model-zoo correctness: decode == full forward (the KV-cache invariant),
+SSD chunked == naive recurrence, RG-LRU scan == stepwise, MoE == dense
+oracle at loose capacity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import MoEConfig, SSMConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.transformer import Batch, Model
+
+CONSISTENCY_ARCHS = ["yi-6b", "chatglm3-6b", "minicpm3-4b", "mamba2-2.7b",
+                     "recurrentgemma-2b", "whisper-small",
+                     "llava-next-mistral-7b", "deepseek-7b"]
+
+
+def _inputs(cfg, key, B, S):
+    kw = {}
+    if cfg.vlm_img_tokens:
+        kw["img_embeds"] = jax.random.normal(
+            key, (B, cfg.vlm_img_tokens, cfg.vlm_d_vision))
+    if cfg.encoder is not None:
+        kw["frame_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder.n_frames, cfg.encoder.d_input))
+    return kw
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = registry.get_smoke_config(arch)
+    m = Model(cfg)
+    key = jax.random.PRNGKey(7)
+    params = m.init(key)
+    B, S = 2, 20
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    kw = _inputs(cfg, key, B, S)
+    full = m.forward(params, Batch(tokens=tokens, **kw))
+    # prefill returns the TOTAL consumed length (image tokens included for
+    # VLMs) -- decode must continue from there
+    logits_p, cache, pos = m.prefill(params, Batch(tokens=tokens[:, :S - 1],
+                                                   **kw), max_seq=S + 12)
+    logits_d, _ = m.decode_step(params, cache, tokens[:, S - 1:S],
+                                jnp.int32(pos))
+    ref = full[:, -1, :]
+    rel = float(jnp.max(jnp.abs(logits_d - ref))) / (
+        float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 2e-2, (arch, rel)
+
+
+@pytest.mark.parametrize("arch", ["arctic-480b", "grok-1-314b"])
+def test_moe_decode_matches_forward_loose_capacity(arch):
+    cfg = registry.get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=8.0))
+    m = Model(cfg)
+    key = jax.random.PRNGKey(7)
+    params = m.init(key)
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full = m.forward(params, Batch(tokens=tokens))
+    _, cache, _ = m.prefill(params, Batch(tokens=tokens[:, :S - 1]),
+                            max_seq=S + 4)
+    logits_d, _ = m.decode_step(params, cache, tokens[:, S - 1:S],
+                                jnp.int32(S - 1))
+    ref = full[:, -1, :]
+    rel = float(jnp.max(jnp.abs(logits_d - ref))) / float(
+        jnp.max(jnp.abs(ref)))
+    assert rel < 2e-2, (arch, rel)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Dense arch + window override: decoding past the window must agree with
+    a full forward restricted by the same window mask."""
+    cfg = registry.get_smoke_config("yi-6b")
+    m = Model(cfg)
+    key = jax.random.PRNGKey(3)
+    params = m.init(key)
+    B, S, W = 1, 24, 8
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full = m.forward(params, Batch(tokens=tokens), window_override=W)
+    _, cache, _ = m.prefill(params, Batch(tokens=tokens[:, :S - 4]),
+                            max_seq=S + 4, window_override=W)
+    logits = None
+    for i in range(4):
+        logits, cache = m.decode_step(params, cache, tokens[:, S - 4 + i:
+                                                            S - 3 + i],
+                                      jnp.int32(S - 4 + i),
+                                      window_override=W)
+    ref = full[:, -1, :]
+    rel = float(jnp.max(jnp.abs(logits - ref))) / float(jnp.max(jnp.abs(ref)))
+    assert rel < 2e-2, rel
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    """The chunked SSD algorithm == the literal per-step recurrence."""
+    B, S, H, P, N = 2, 37, 4, 8, 16
+    key = jax.random.PRNGKey(0)
+    s = SSMConfig(d_state=N, head_dim=P, chunk=16, n_groups=1)
+    xdt = jax.random.normal(key, (B, S, H, P)) * 0.3
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (B, S, H))) * 0.3
+    Bm = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 1, N)) * 0.3
+    Cm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, 1, N)) * 0.3
+    y_chunk, final = ssm_lib._ssd_chunked(xdt, a, Bm, Cm, s)
+    # naive recurrence
+    state = np.zeros((B, H, N, P))
+    ys = []
+    xn, an, Bn, Cn = map(np.asarray, (xdt, a, Bm, Cm))
+    for t in range(S):
+        state = state * np.exp(an[:, t])[:, :, None, None] + np.einsum(
+            "bgn,bhp->bhnp", Bn[:, t], xn[:, t])
+        ys.append(np.einsum("bgn,bhnp->bhp", Cn[:, t], state))
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_ref, rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), state, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_matches_dense_oracle_loose_capacity():
+    """Gather-dispatch MoE == explicit per-token expert mixture when nothing
+    is dropped."""
+    d, E = 16, 4
+    cfg = MoEConfig(n_experts=E, top_k=2, d_ff=32, capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = {
+        "router": jax.random.normal(key, (d, E)),
+        "w1": jax.random.normal(jax.random.fold_in(key, 1), (E, d, 32)) * 0.1,
+        "w2": jax.random.normal(jax.random.fold_in(key, 2), (E, 32, d)) * 0.1,
+        "w3": jax.random.normal(jax.random.fold_in(key, 3), (E, d, 32)) * 0.1,
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 4), (2, 9, d)) * 0.5
+    y, aux = moe_lib.moe_apply(p, x, cfg)
+    # oracle: every token through its top-2 experts densely
+    xf = np.asarray(x.reshape(-1, d), np.float32)
+    w, ids, _ = moe_lib.route(jnp.asarray(xf), p["router"], cfg)
+    w, ids = np.asarray(w), np.asarray(ids)
+    ref = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(2):
+            e = ids[t, j]
+            h = np.asarray(jax.nn.silu(xf[t] @ p["w1"][e])) * (
+                xf[t] @ np.asarray(p["w3"][e]))
+            ref[t] += w[t, j] * (h @ np.asarray(p["w2"][e]))
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, d)), ref, rtol=5e-3,
+                               atol=5e-4)
+    assert float(aux) > 0
+
+
+def test_rglru_scan_matches_step():
+    from repro.configs.base import RGLRUConfig
+    from repro.models import rglru as rg
+    cfg = RGLRUConfig(lru_width=8, conv_width=4)
+    key = jax.random.PRNGKey(0)
+    p = jax.tree_util.tree_map(
+        lambda pd: jax.random.normal(jax.random.PRNGKey(hash(str(pd)) %
+                                                        (2**31)),
+                                     pd.shape) * 0.2,
+        rg.rglru_defs(8, cfg, jnp.float32),
+        is_leaf=lambda x: hasattr(x, "kind"))
+    x = jax.random.normal(jax.random.fold_in(key, 9), (1, 11, 8)) * 0.5
+    y_scan = rg.rglru_apply(p, x, cfg)
+    cache = rg.rglru_init_cache(1, cfg, jnp.float32)
+    ys = []
+    for t in range(11):
+        y1, cache = rg.rglru_decode(p, x[:, t:t + 1], cache, cfg)
+        ys.append(y1)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-7b",
+                                  "recurrentgemma-2b"])
+def test_int8_kv_cache_decode(arch):
+    """Quantized (int8 + per-vector scale) KV cache: decode matches the full
+    forward within the quantization tolerance, and the cache is int8."""
+    cfg = registry.get_smoke_config(arch)
+    m = Model(cfg)
+    key = jax.random.PRNGKey(5)
+    params = m.init(key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full = m.forward(params, Batch(tokens=tokens))
+    _, cache, pos = m.prefill(params, Batch(tokens=tokens[:, :S - 1]),
+                              max_seq=S + 4, kv_dtype="int8")
+    leaves = {jax.tree_util.keystr(p): l for p, l in
+              jax.tree_util.tree_leaves_with_path(cache)}
+    assert any(l.dtype == jnp.int8 for l in leaves.values())
+    logits, _ = m.decode_step(params, cache, tokens[:, S - 1:S],
+                              jnp.int32(pos), kv_dtype="int8")
+    rel = float(jnp.max(jnp.abs(logits - full[:, -1]))) / float(
+        jnp.max(jnp.abs(full[:, -1])))
+    assert rel < 0.05, (arch, rel)

@@ -1,0 +1,52 @@
+"""Optimizers: convergence on a quadratic + state dtype handling."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import optimizers as opt_lib, schedules
+
+
+@pytest.mark.parametrize("name", sorted(opt_lib.OPTIMIZERS))
+def test_optimizer_reduces_quadratic(name):
+    kw = {"weight_decay": 0.0} if name != "lars" else {"weight_decay": 0.0,
+                                                       "trust_coeff": 0.1}
+    opt = opt_lib.make_optimizer(name, 0.1, **kw)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5]), "b": jnp.asarray([1.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for step in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params,
+                                   jnp.asarray(step, jnp.int32))
+    assert float(loss(params)) < 0.2 * l0, (name, float(loss(params)))
+
+
+def test_bf16_state_dtype():
+    opt = opt_lib.adamw(1e-3, state_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((4, 4))}
+    params2, state2 = opt.update(g, state, params, jnp.int32(0))
+    assert params2["w"].dtype == params["w"].dtype
+    assert state2["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, gn = opt_lib.clip_by_global_norm(g, 1.0)
+    assert float(gn) > 100
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+def test_schedules():
+    s = schedules.warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) < 0.2
+    assert abs(float(s(jnp.int32(10))) - 1.0) < 0.11
+    assert float(s(jnp.int32(99))) < 0.2
+    assert schedules.linear_batch_scaled(0.1, 256, 8192) == pytest.approx(3.2)

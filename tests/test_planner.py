@@ -1,0 +1,75 @@
+"""DL-Layer-API planner: kind -> PartitionSpec rules on the production mesh."""
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import planner as pl
+
+
+def _planner(abstract_pod, fsdp=False):
+    return pl.Planner(mesh=abstract_pod, fsdp=fsdp)
+
+
+def test_proj_specs(abstract_pod):
+    p = _planner(abstract_pod)
+    assert p.spec_for(pl.ParamDef((4096, 11008), pl.K_PROJ_IN)) \
+        == P(None, "model")
+    assert p.spec_for(pl.ParamDef((11008, 4096), pl.K_PROJ_OUT)) \
+        == P("model", None)
+    assert p.spec_for(pl.ParamDef((4096,), pl.K_NORM)) == P(None)
+
+
+def test_indivisible_dims_fall_back(abstract_pod):
+    p = _planner(abstract_pod)
+    # vocab 73448 is not divisible by 16 -> embed shards d_model instead
+    assert p.spec_for(pl.ParamDef((73448, 2560), pl.K_EMBED)) \
+        == P(None, "model")
+    # nothing divisible -> fully replicated
+    assert p.spec_for(pl.ParamDef((51865, 7), pl.K_HEAD)) == P(None, None)
+
+
+def test_expert_specs(abstract_pod):
+    p = _planner(abstract_pod)
+    # 128 experts over 16-way model axis
+    assert p.spec_for(pl.ParamDef((128, 7168, 4864), pl.K_EXPERT_IN)) \
+        == P("model", None, None)
+    # 8 experts don't divide 16 -> tensor-parallel over d_ff
+    assert p.spec_for(pl.ParamDef((8, 6144, 32768), pl.K_EXPERT_IN)) \
+        == P(None, None, "model")
+
+
+def test_fsdp_adds_batch_axis(abstract_pod):
+    p = _planner(abstract_pod, fsdp=True)
+    spec = p.spec_for(pl.ParamDef((4096, 11008), pl.K_PROJ_IN))
+    assert spec == P("data", "model")
+
+
+def test_stacked_leading_dim_replicated(abstract_pod):
+    p = _planner(abstract_pod)
+    spec = p.spec_for(pl.ParamDef((32, 4096, 11008), pl.K_PROJ_IN),
+                      stacked=True)
+    assert spec == P(None, None, "model")
+
+
+def test_fsdp_decision():
+    assert not pl.decide_fsdp(6e9, 16, train=True)          # yi-6b fits
+    assert pl.decide_fsdp(480e9, 16, train=True)            # arctic doesn't
+    # even serving a 480B model needs parameter sharding beyond the group
+    assert pl.decide_fsdp(480e9, 16, train=False)
+    assert not pl.decide_fsdp(7e9, 16, train=False)
+
+
+def test_batch_and_cache_specs(abstract_pod):
+    p = _planner(abstract_pod)
+    assert p.tokens_spec(256) == P("data", None)
+    assert p.tokens_spec(1) == P(None, None)                # batch 1: replicate
+    # GQA kv=4 doesn't divide 16 -> shard the sequence dim instead
+    assert p.kv_cache_spec(128, 32768, 4) == P("data", "model", None, None)
+    assert p.kv_cache_spec(128, 32768, 16) == P("data", None, "model", None)
+
+
+def test_plan_report_runs(abstract_pod):
+    from repro.configs import cnn_tables
+    rep = pl.plan_report(cnn_tables.resnet50_layers(), batch=2048, p=256)
+    assert len(rep) > 50
+    assert all(r.choice.group_size >= 1 for r in rep)

@@ -1,0 +1,100 @@
+"""Hypothesis property tests on system invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import c2c, hw, scheduler, simulator as sim
+from repro.kernels import ops
+from repro.models import moe as moe_lib
+from repro.configs.base import MoEConfig
+
+hypothesis.settings.register_profile(
+    "ci", settings(max_examples=20, deadline=None))
+hypothesis.settings.load_profile("ci")
+
+
+@given(st.integers(1, 5000), st.floats(1e-6, 1e3))
+def test_quantization_error_bound(n, scale):
+    """|x - dq(q(x))| <= blockwise amax / 127 (one step of rounding)."""
+    x = np.random.RandomState(n).randn(n).astype(np.float32) * scale
+    q, s, meta = ops.quantize(jnp.asarray(x), backend="jnp")
+    xr = np.asarray(ops.dequantize(q, s, meta, backend="jnp"))
+    assert np.max(np.abs(x - xr)) <= np.max(np.abs(x)) / 127.0 + 1e-6 * scale
+
+
+@given(st.lists(st.integers(1, 400), min_size=1, max_size=8),
+       st.integers(64, 4096))
+def test_bucket_fuse_unfuse_partition(sizes, bucket_bytes):
+    tree = {f"l{i}": jnp.arange(float(s)) for i, s in enumerate(sizes)}
+    plan = scheduler.plan_buckets(tree, bucket_bytes=float(bucket_bytes))
+    leaves = jax.tree_util.tree_leaves(tree)
+    seen = set()
+    for b in plan.buckets:
+        flat = scheduler.fuse_bucket(leaves, b)
+        assert flat.size == b.n_elems
+        back = scheduler.unfuse_bucket(flat, b)
+        for lid, leaf in back.items():
+            assert lid not in seen
+            seen.add(lid)
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.asarray(leaves[lid]))
+    assert seen == set(range(len(leaves)))
+
+
+@given(st.integers(2, 512), st.integers(1, 9))
+def test_hybrid_ratio_bounded_by_extremes(p_exp, g_exp):
+    p = 2 ** int(np.log2(p_exp))
+    p = max(p, 2)
+    g = 2 ** g_exp
+    if g > p:
+        g = p
+    l = c2c.fc_layer("fc", 1024, 1024)
+    r = c2c.hybrid_ratio(l, 256, p, g)
+    assert r >= 0
+
+
+@given(st.integers(2, 128), st.floats(0.2, 1.0))
+def test_simulator_policy_dominance(p, eta):
+    layers = [sim.SimLayer(f"l{i}", 1e-3, 2e-3, 4e6 * (i + 1))
+              for i in range(6)]
+    prio = sim.simulate_iteration(layers, p, hw.ETH_10G,
+                                  sim.Policy.PRIORITY_OVERLAP,
+                                  overlap_eff=eta)
+    fifo = sim.simulate_iteration(layers, p, hw.ETH_10G,
+                                  sim.Policy.FIFO_OVERLAP, overlap_eff=eta)
+    assert prio.exposed_comm <= fifo.exposed_comm + 1e-9
+    assert prio.exposed_comm >= -1e-9
+
+
+@given(st.integers(4, 200), st.integers(2, 8), st.integers(1, 2))
+def test_moe_dispatch_indices_valid(t, e, k):
+    cfg = MoEConfig(n_experts=e, top_k=k, d_ff=8)
+    ids = jnp.asarray(np.random.RandomState(t).randint(0, e, size=(t, k)))
+    cap = moe_lib.capacity(t, cfg)
+    slot_token, slot_valid, slot_wsrc = moe_lib._dispatch_indices(ids, cfg,
+                                                                  cap)
+    st_, sv, sw = (np.asarray(slot_token), np.asarray(slot_valid),
+                   np.asarray(slot_wsrc))
+    assert st_.shape == (e * cap,)
+    assert (st_[sv] >= 0).all() and (st_[sv] < t).all()
+    # every valid slot's expert (slot // cap) matches the routed expert
+    slots = np.arange(e * cap)
+    experts = slots // cap
+    flat_ids = np.asarray(ids).reshape(-1)
+    assert (flat_ids[sw[sv]] == experts[sv]).all()
+    # no token-choice duplicated into two slots
+    assert len(np.unique(sw[sv])) == sv.sum()
+
+
+@given(st.integers(0, 10000))
+def test_data_pipeline_deterministic(step):
+    from repro.data import pipeline
+    cfg = pipeline.DataConfig(vocab=97, seq_len=16, global_batch=4)
+    a = pipeline.batch_at(cfg, step)["tokens"]
+    b = pipeline.batch_at(cfg, step)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 97

@@ -1,0 +1,75 @@
+"""Unit tests for the roofline HLO parser (collective accounting)."""
+
+import pytest
+
+from repro.launch import roofline as rf
+
+HLO = """
+ENTRY %main (p0: bf16[128,4096]) -> bf16[128,4096] {
+  %ag = bf16[2048,4096]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[128,4096]{1,0} all-reduce(%y), replica_groups=[16,16]<=[256], to_apply=%add
+  %w = bf16[8] while(%init), body=%body.1, condition=%cond.1
+}
+%body.1 (p: bf16[8]) -> bf16[8] {
+  %ar2 = bf16[64,512]{1,0} all-reduce(%z), replica_groups=[16,16]<=[256], to_apply=%add
+  %w2 = bf16[8] while(%q), body=%body.2, condition=%cond.2
+}
+%body.2 (p: bf16[8]) -> bf16[8] {
+  %a2a = bf16[16,1024]{1,0} all-to-all(%u), replica_groups=[16,16]<=[256]
+}
+"""
+
+
+def test_group_size_parse():
+    assert rf._group_size("replica_groups=[16,16]<=[256]", 999) == 16
+    assert rf._group_size("replica_groups={{0,1,2,3}}", 999) == 4
+    assert rf._group_size("no groups here", 7) == 7
+
+
+def test_wire_formulas():
+    assert rf._wire_bytes("all-reduce", 100.0, 4) == pytest.approx(150.0)
+    assert rf._wire_bytes("all-gather", 100.0, 4) == pytest.approx(75.0)
+    assert rf._wire_bytes("reduce-scatter", 25.0, 4) == pytest.approx(75.0)
+    assert rf._wire_bytes("all-reduce", 100.0, 1) == 0.0
+
+
+def test_loop_nesting_multipliers():
+    out = rf.collective_wire_bytes(HLO, n_chips=256, loop_mult=10.0)
+    # entry ops x1; depth-1 body x10; depth-2 body x10 (no outer loop)
+    ag = 2048 * 4096 * 2 * 15 / 16
+    ar = 128 * 4096 * 4 * 2 * 15 / 16
+    ar2 = 64 * 512 * 2 * 2 * 15 / 16 * 10
+    a2a = 16 * 1024 * 2 * 15 / 16 * 10
+    assert out["all-gather"] == pytest.approx(ag, rel=1e-6)
+    assert out["all-reduce"] == pytest.approx(ar + ar2, rel=1e-6)
+    assert out["all-to-all"] == pytest.approx(a2a, rel=1e-6)
+
+
+def test_nested_accumulation_multipliers():
+    out = rf.collective_wire_bytes(HLO, n_chips=256, loop_mult=10.0,
+                                   outer_mult=4.0)
+    # depth-1 body x4 (accum); depth-2 body x40 (accum x layers)
+    ar2 = 64 * 512 * 2 * 2 * 15 / 16 * 4
+    a2a = 16 * 1024 * 2 * 15 / 16 * 40
+    assert out["all-reduce"] == pytest.approx(
+        128 * 4096 * 4 * 2 * 15 / 16 + ar2, rel=1e-6)
+    assert out["all-to-all"] == pytest.approx(a2a, rel=1e-6)
+
+
+def test_analyze_terms_and_dominant():
+    r = rf.analyze(arch="a", shape="s", mesh_name="m", chips=256,
+                   cost_full={"flops": 1e12, "bytes accessed": 1e12},
+                   cost_block={"flops": 1e11, "bytes accessed": 1e11},
+                   repeats=10, hlo_text=HLO, model_flops=2.56e14, accum=1)
+    assert r.hlo_flops == pytest.approx(1e12 + 9 * 1e11)
+    assert r.dominant in ("compute", "memory", "collective")
+    assert r.useful_ratio == pytest.approx(2.56e14 / (r.hlo_flops * 256))
+
+
+def test_analyze_accum_scaling():
+    r1 = rf.analyze(arch="a", shape="s", mesh_name="m", chips=256,
+                    cost_full={"flops": 1e12, "bytes accessed": 0.0},
+                    cost_block={"flops": 1e11, "bytes accessed": 0.0},
+                    repeats=10, hlo_text="", model_flops=1.0, accum=4)
+    # accum x repeats - 1 block costs on top
+    assert r1.hlo_flops == pytest.approx(1e12 + 39 * 1e11)

@@ -1,0 +1,67 @@
+"""Invariants of the discrete-event communication-scheduling simulator."""
+
+import pytest
+
+from repro.configs import cnn_tables
+from repro.core import hw, simulator as sim
+
+
+def _layers(topo="resnet50", bs=32):
+    return sim.layers_from_specs(cnn_tables.TOPOLOGIES[topo](), bs,
+                                 hw.XEON_6148)
+
+
+@pytest.mark.parametrize("topo", sorted(cnn_tables.TOPOLOGIES))
+def test_policy_ordering(topo):
+    """priority exposure <= fifo exposure <= blocking exposure."""
+    layers = _layers(topo)
+    for p in (8, 64):
+        e = {pol: sim.simulate_iteration(layers, p, hw.ETH_10G, pol,
+                                         overlap_eff=0.7).exposed_comm
+             for pol in sim.Policy}
+        assert -1e-9 <= e[sim.Policy.PRIORITY_OVERLAP] \
+            <= e[sim.Policy.FIFO_OVERLAP] + 1e-9
+        assert e[sim.Policy.FIFO_OVERLAP] <= e[sim.Policy.BLOCKING] + 1e-9
+
+
+def test_priority_serves_first_layer_first():
+    layers = _layers()
+    st = sim.simulate_iteration(layers, 64, hw.ETH_10G,
+                                sim.Policy.PRIORITY_OVERLAP)
+    done = st.completion_times
+    # the first layer's reduction must not finish after bulk later layers
+    assert done[0] <= max(done) + 1e-12
+    assert done[0] <= sorted(done)[len(done) // 2]
+
+
+def test_single_node_no_comm():
+    layers = _layers()
+    st = sim.simulate_iteration(layers, 1, hw.ETH_10G,
+                                sim.Policy.FIFO_OVERLAP)
+    assert st.exposed_comm == pytest.approx(0.0, abs=1e-12)
+    assert st.comm_busy == pytest.approx(0.0, abs=1e-12)
+
+
+def test_total_time_accounting():
+    layers = _layers()
+    for pol in sim.Policy:
+        st = sim.simulate_iteration(layers, 32, hw.ETH_10G, pol)
+        assert st.total_time >= st.compute_time - 1e-12
+        assert st.exposed_comm == pytest.approx(
+            st.total_time - st.compute_time)
+
+
+def test_faster_link_not_worse():
+    layers = _layers()
+    slow = sim.simulate_iteration(layers, 64, hw.ETH_10G,
+                                  sim.Policy.PRIORITY_OVERLAP)
+    fast = sim.simulate_iteration(layers, 64, hw.OMNIPATH,
+                                  sim.Policy.PRIORITY_OVERLAP)
+    assert fast.exposed_comm <= slow.exposed_comm + 1e-12
+
+
+def test_scaling_efficiency_bounds():
+    layers = _layers()
+    for p in (2, 16, 128):
+        eff = sim.scaling_efficiency(layers, p, hw.OMNIPATH)
+        assert 0.0 < eff <= 1.0
