@@ -5,26 +5,46 @@ Times the MLSL-style collectives data path end to end on the local device
 that would wrap the wire ops on TPU), and emits the MODELED mesh-scale time
 for each wire format on the production pod (derived column) -- the analog of
 an OSU-style latency/bandwidth table for the library.
+
+With ``--hier`` (run as a script, so the XLA flag below lands before jax is
+imported) the sweep runs on 8 virtual host devices: flat vs hierarchical
+allreduce on a ("node"=2, "local"=4) mesh -- wall time of each
+decomposition, per-element wire bytes by level (the fabric-byte saving is
+the paper's scale-out headline), and the per-level cost model's flat/hier
+choice across message sizes on the canonical topologies. If jax was already
+imported with fewer devices (e.g. via benchmarks/run.py), the sweep emits a
+"skipped" line instead.
 """
 
 from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__" and "--hier" in sys.argv \
+        and "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    # must be set before jax import (SNIPPETS.md idiom)
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, time_fn
-from repro.core import collectives, hw
+from repro import compat
+from repro.core import collectives, hier, hw, planner
 
 
 def run():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
 
     for n in (1 << 16, 1 << 21):
         x = jax.random.normal(jax.random.PRNGKey(0), (n,), jnp.float32)
         for wire in collectives.WIRES:
-            fn = jax.jit(lambda v, wire=wire: jax.shard_map(
+            fn = jax.jit(lambda v, wire=wire: compat.shard_map(
                 lambda u: collectives.allreduce(u, ("data",), wire=wire),
                 mesh=mesh, in_specs=P(), out_specs=P(),
                 axis_names={"data"}, check_vma=False)(v))
@@ -42,15 +62,67 @@ def run():
          lambda u: collectives.reduce_scatter(u, ("data",))),
         ("all_gather", lambda u: collectives.all_gather(u, ("data",))),
     ):
-        f = jax.jit(lambda v, fn_=fn_: jax.shard_map(
+        f = jax.jit(lambda v, fn_=fn_: compat.shard_map(
             fn_, mesh=mesh, in_specs=P(), out_specs=P(),
             axis_names={"data"}, check_vma=False)(v))
         us = time_fn(f, x)
         emit(f"collectives/{name}/n{1 << 18}", us, "local_1rank_path")
 
 
+def run_hier():
+    """Flat vs hierarchical sweep on a ("node"=2, "local"=4) factored mesh."""
+    n_dev = jax.device_count()
+    if n_dev < 8:
+        emit("collectives/hier/skipped", 0.0,
+             f"needs 8 virtual devices, have {n_dev}")
+        return
+    node, local = 2, 4
+    mesh = compat.make_mesh((node, local), (hier.NODE_AXIS, hier.LOCAL_AXIS))
+    dspec = P((hier.NODE_AXIS, hier.LOCAL_AXIS))
+
+    configs = (
+        ("flat/fp32", None, collectives.WIRE_FP32),
+        ("flat/int8", None, collectives.WIRE_INT8),
+        ("hier/fp32-fp32", hier.HierSpec(), None),
+        ("hier/bf16-int8",
+         hier.HierSpec(wire_intra=collectives.WIRE_BF16,
+                       wire_inter=collectives.WIRE_INT8), None),
+    )
+    for n in (1 << 16, 1 << 21):
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              (node * local, n), jnp.float32)
+        for name, spec, wire in configs:
+            if spec is None:
+                inner = lambda u, w=wire: collectives.allreduce(  # noqa: E731
+                    u[0], (hier.NODE_AXIS, hier.LOCAL_AXIS), wire=w)
+                wb = hier.flat_wire_bytes_per_elem(wire)
+            else:
+                inner = lambda u, s=spec: hier.hier_allreduce(  # noqa: E731
+                    u[0], s)
+                wb = hier.hier_wire_bytes_per_elem(spec, local, node)
+            fn = jax.jit(compat.shard_map(inner, mesh=mesh, in_specs=dspec,
+                                          out_specs=P()))
+            us = time_fn(fn, x)
+            emit(f"collectives/hier_sweep/{name}/n{n}", us,
+                 f"wire_B_per_elem_total={wb.total:.3f};"
+                 f"intra={wb.intra:.3f};inter={wb.inter:.3f}")
+
+    # the per-level cost model's choice across message sizes
+    for topo in (hw.CLOUD_10G, hw.HPC_OPA):
+        for nbytes in (4e3, 4e5, 4e7):
+            algo = planner.choose_allreduce_algo(nbytes, nodes=16, topo=topo)
+            t_flat = hw.flat_allreduce_time(nbytes, 16, topo)
+            t_hier = hw.hier_allreduce_time(nbytes, 16, topo)
+            emit(f"collectives/hier_choice/{topo.name}/b{int(nbytes)}",
+                 0.0, f"algo={algo};flat_ms={t_flat*1e3:.3f};"
+                 f"hier_ms={t_hier*1e3:.3f}")
+
+
 def main():
-    run()
+    if "--hier" in sys.argv:
+        run_hier()
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -8,8 +8,7 @@
   PYTHONPATH=src python examples/hybrid_parallelism_demo.py
 """
 
-from jax.sharding import AbstractMesh
-
+from repro import compat
 from repro.configs import cnn_tables, registry
 from repro.core import c2c, hw, planner as pl, simulator as sim
 from repro.models.transformer import Model
@@ -40,7 +39,7 @@ def main():
               f"total={st.total_time*1e3:7.1f}ms")
 
     print("\n=== 3. planner on the production mesh (yi-6b) ===")
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = compat.abstract_mesh((16, 16), ("data", "model"))
     model = Model(registry.get_config("yi-6b"))
     planner = pl.make_planner(mesh, model.n_params())
     defs = model.param_defs()

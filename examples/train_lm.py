@@ -16,6 +16,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.checkpoint import ckpt
 from repro.configs.base import AttnConfig, ModelConfig
 from repro.core.planner import Planner
@@ -60,8 +61,8 @@ def main():
     steps = args.steps or p["steps"]
     cfg = build_config(p)
     model = Model(cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
     planner = Planner(mesh=mesh)
     lr = schedules.warmup_cosine(3e-3, steps // 10, steps)
     opt = opt_lib.adamw(lr)
@@ -72,7 +73,7 @@ def main():
                                global_batch=p["batch"])
     print(f"preset={args.preset} params={model.n_params():,} "
           f"comm={args.comm}/{args.wire} steps={steps}")
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = tr.make_train_state(model, opt, jax.random.PRNGKey(0))
         step = jax.jit(tr.make_train_step(model, opt, mesh, planner, comm))
         t0 = time.time()

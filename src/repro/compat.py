@@ -1,0 +1,219 @@
+"""Version-portability shim over JAX API drift.
+
+The reproduction targets the modern (JAX >= 0.5) spelling of the sharding
+APIs, but must also run on 0.4.x containers (the CI image pins 0.4.37).
+The drift this papers over:
+
+  * ``jax.make_mesh``           -- grew an ``axis_types=`` kwarg in 0.5;
+                                   0.4.x only takes (axis_shapes, axis_names).
+  * ``jax.sharding.AxisType``   -- does not exist before 0.5; callers that
+                                   only ever pass ``AxisType.Auto`` get a
+                                   sentinel enum here.
+  * ``jax.shard_map``           -- promoted out of ``jax.experimental`` with
+                                   a keyword-only signature, an ``axis_names``
+                                   set (manual axes) and ``check_vma`` (the
+                                   rename of ``check_rep``).  The 0.4.x
+                                   spelling is positional with an ``auto``
+                                   frozenset (the complement of the manual
+                                   set) and ``check_rep``.
+  * ``jax.sharding.AbstractMesh`` -- 0.4.x takes one ``shape_tuple`` of
+                                   (name, size) pairs; >= 0.5 takes
+                                   (axis_sizes, axis_names).
+  * ``jax.set_mesh``            -- new in 0.6; on 0.4.x entering the
+                                   ``Mesh`` object itself as a context
+                                   manager provides the same scoping.
+  * ``jax.lax.axis_size``       -- new in 0.4.38+; ``lax.psum(1, axes)``
+                                   is the portable spelling (constant-folded
+                                   at trace time for a static mesh).
+
+Everything in the repo that touches these APIs goes through this module, so
+a JAX upgrade is a change to exactly one file.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+import re
+from typing import Any, Callable, Sequence
+
+import jax
+from jax import lax
+from jax.sharding import AbstractMesh, Mesh
+
+
+def _parse_version(v: str) -> tuple:
+    return tuple(int(x) for x in re.findall(r"\d+", v)[:3])
+
+
+JAX_VERSION: tuple = _parse_version(jax.__version__)
+
+# Supported range, enforced loosely (we shim, not hard-pin).
+MIN_SUPPORTED = (0, 4, 30)
+
+
+# --------------------------------------------------------------------------
+# AxisType
+# --------------------------------------------------------------------------
+
+if hasattr(jax.sharding, "AxisType"):            # JAX >= 0.5
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType:                              # sentinel for 0.4.x
+        """Placeholder mirroring jax.sharding.AxisType's members.
+
+        0.4.x meshes have no axis-type concept; ``make_mesh`` below accepts
+        and drops these values, so call sites can use one spelling.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_HAS_NATIVE_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+# --------------------------------------------------------------------------
+# Mesh construction
+# --------------------------------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Sequence[Any] | None = None,
+              devices=None) -> Mesh:
+    """``jax.make_mesh`` across versions; ``axis_types`` dropped on 0.4.x."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and _HAS_NATIVE_AXIS_TYPES:
+        kwargs["axis_types"] = tuple(axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+_ABSTRACT_MESH_OLD_STYLE = (
+    "shape_tuple" in inspect.signature(AbstractMesh.__init__).parameters)
+
+
+def abstract_mesh(axis_shapes: Sequence[int],
+                  axis_names: Sequence[str]) -> AbstractMesh:
+    """``AbstractMesh`` across the (sizes, names) vs shape_tuple signatures."""
+    shapes = tuple(axis_shapes)
+    names = tuple(axis_names)
+    if _ABSTRACT_MESH_OLD_STYLE:                 # 0.4.x: ((name, size), ...)
+        return AbstractMesh(tuple(zip(names, shapes)))
+    return AbstractMesh(shapes, names)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager scoping `mesh` as the ambient mesh.
+
+    >= 0.6: ``jax.set_mesh``; 0.4.x: the Mesh object is itself a context
+    manager with equivalent scoping semantics for our usage (jit + explicit
+    NamedSharding everywhere).
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh                                  # Mesh.__enter__ / __exit__
+
+
+# --------------------------------------------------------------------------
+# shard_map
+# --------------------------------------------------------------------------
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+if _NEW_SHARD_MAP is None:
+    from jax.experimental.shard_map import shard_map as _OLD_SHARD_MAP
+else:
+    _OLD_SHARD_MAP = None
+
+
+def shard_map(f: Callable | None = None, *, mesh: Mesh, in_specs, out_specs,
+              axis_names: Any = None, check_vma: bool = False):
+    """Modern-keyword ``shard_map`` runnable on both API generations.
+
+    ``axis_names`` is the set of MANUAL axes (modern semantics); axes of the
+    mesh not named stay auto/GSPMD. ``None`` means fully manual. On 0.4.x
+    this is translated to the legacy ``auto=`` complement set and
+    ``check_vma`` to ``check_rep``.
+    """
+    if f is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, axis_names=axis_names,
+                                 check_vma=check_vma)
+    if _NEW_SHARD_MAP is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        try:
+            return _NEW_SHARD_MAP(f, check_vma=check_vma, **kwargs)
+        except TypeError:                        # 0.5.x: pre-rename kwarg
+            return _NEW_SHARD_MAP(f, check_rep=check_vma, **kwargs)
+    manual = (set(mesh.axis_names) if axis_names is None
+              else set(axis_names))
+    auto = frozenset(set(mesh.axis_names) - manual)
+    return _OLD_SHARD_MAP(f, mesh, in_specs, out_specs,
+                          check_rep=check_vma, auto=auto)
+
+
+# 0.4.x XLA aborts (hard Check failure in hlo_sharding_util) when a
+# ``lax.scan`` while-loop appears inside a PARTIAL-manual shard_map region
+# (manual over some axes, auto/GSPMD over others). Fully-manual regions are
+# fine. Callers that scan inside such regions must unroll on old JAX
+# (see models.transformer / train.trainer).
+PARTIAL_MANUAL_SCAN_OK = _NEW_SHARD_MAP is not None
+
+
+# --------------------------------------------------------------------------
+# In-manual-region helpers
+# --------------------------------------------------------------------------
+
+def maybe_scan(body: Callable, init, xs, *, unroll: bool = False):
+    """``lax.scan`` with a python-unrolled fallback; ys are discarded.
+
+    The single place implementing the scan-or-unroll idiom required inside
+    partial-manual shard_map regions on 0.4.x (PARTIAL_MANUAL_SCAN_OK):
+    `body(carry, xs_slice) -> (carry, _)`. Returns (final_carry, None).
+    """
+    if not unroll:
+        carry, _ = lax.scan(body, init, xs)
+        return carry, None
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = init
+    for r in range(n):
+        carry, _ = body(carry, jax.tree_util.tree_map(lambda x: x[r], xs))
+    return carry, None
+
+
+def axis_size(axes) -> int:
+    """Product of manual-axis sizes, callable inside a shard_map region."""
+    ax = (axes,) if isinstance(axes, str) else tuple(axes)
+    if hasattr(lax, "axis_size"):
+        size = 1
+        for a in ax:
+            size *= lax.axis_size(a)
+        return size
+    return lax.psum(1, ax)                       # static: folded at trace
+
+
+def axis_index(axes):
+    """``lax.axis_index`` (portable for str and tuple on both generations)."""
+    return lax.axis_index(axes)
+
+
+# --------------------------------------------------------------------------
+# Compiled-executable introspection
+# --------------------------------------------------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to one flat dict.
+
+    0.4.x returns a one-element list of per-program dicts; >= 0.5 returns
+    the dict directly (and may return None for unsupported backends).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

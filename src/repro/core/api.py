@@ -21,7 +21,7 @@ from typing import Optional
 
 import jax
 
-from repro.core import c2c, collectives
+from repro.core import c2c, collectives, hier
 from repro.core.planner import Planner, make_planner, plan_report
 from repro.models.transformer import Model
 from repro.optim import optimizers as opt_lib
@@ -47,9 +47,14 @@ class Session:
 
     @property
     def comm(self) -> collectives.Comm:
-        return collectives.Comm(mesh=self.mesh,
-                                data_axes=self.planner.batch_axes,
-                                model_axis=self.planner.model_axis)
+        # a ("node", "local")-factored data dimension makes the communicator
+        # hierarchy-aware: Comm.allreduce routes through repro.core.hier
+        batch = self.planner.batch_axes
+        node = hier.NODE_AXIS if hier.NODE_AXIS in batch else None
+        local = hier.LOCAL_AXIS if hier.LOCAL_AXIS in batch else None
+        return collectives.Comm(mesh=self.mesh, data_axes=batch,
+                                model_axis=self.planner.model_axis,
+                                node_axis=node, local_axis=local)
 
     # --- DL layer interface ---------------------------------------------------
 

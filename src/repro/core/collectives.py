@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.kernels import ops as kops
 
 WIRE_FP32 = "fp32"
@@ -58,10 +59,7 @@ def _axes_tuple(axes) -> tuple:
 
 def axis_size(axes) -> int:
     """Product of the manual-axis sizes (callable inside shard_map)."""
-    size = 1
-    for a in _axes_tuple(axes):
-        size *= lax.axis_size(a)
-    return size
+    return compat.axis_size(_axes_tuple(axes))
 
 
 def _pad_flat(flat: jax.Array, quantum: int) -> jax.Array:
@@ -188,19 +186,25 @@ class Comm:
 
     `data_axes` are the gradient-reduction axes (data parallel dimension);
     `model_axis` is the node-group axis used for model/hybrid parallelism.
+    When the data-parallel dimension is factored over the machine hierarchy,
+    `node_axis`/`local_axis` name the inter-node (fabric) and intra-node
+    (fast link) axes and `allreduce` routes through the two-level path
+    (repro.core.hier) with per-level wire precision.
     """
 
     mesh: jax.sharding.Mesh
     data_axes: tuple
     model_axis: str | None = "model"
+    node_axis: str | None = None       # inter-node fabric axis
+    local_axis: str | None = None      # intra-node fast-link axis
 
     def run(self, fn: Callable, in_specs, out_specs, *args,
             extra_manual_axes: Sequence[str] = ()):
         """Run `fn` manually over the data axes (model axis stays GSPMD)."""
         manual = set(self.data_axes) | set(extra_manual_axes)
-        wrapped = jax.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
-                                out_specs=out_specs, axis_names=manual,
-                                check_vma=False)
+        wrapped = compat.shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                                   out_specs=out_specs, axis_names=manual,
+                                   check_vma=False)
         return wrapped(*args)
 
     @property
@@ -215,3 +219,48 @@ class Comm:
         if self.model_axis is None:
             return 1
         return self.mesh.shape[self.model_axis]
+
+    # -- machine-hierarchy awareness ---------------------------------------
+
+    @property
+    def hierarchical(self) -> bool:
+        """True when the data axes are factored over the node hierarchy."""
+        return (self.node_axis is not None and self.local_axis is not None
+                and self.node_axis in self.data_axes
+                and self.local_axis in self.data_axes)
+
+    @property
+    def node_size(self) -> int:
+        return self.mesh.shape[self.node_axis] if self.node_axis else 1
+
+    @property
+    def local_size(self) -> int:
+        return self.mesh.shape[self.local_axis] if self.local_axis else 1
+
+    def hier_spec(self, *, wire_intra: str = WIRE_FP32,
+                  wire_inter: str = WIRE_FP32, error_feedback: bool = False):
+        from repro.core import hier as hier_lib
+        assert self.hierarchical, (self.node_axis, self.local_axis,
+                                   self.data_axes)
+        return hier_lib.HierSpec(node_axis=self.node_axis,
+                                 local_axis=self.local_axis,
+                                 wire_intra=wire_intra,
+                                 wire_inter=wire_inter,
+                                 error_feedback=error_feedback)
+
+    def allreduce(self, x: jax.Array, *, wire: str = WIRE_FP32,
+                  wire_intra: str | None = None,
+                  mean: bool = False) -> jax.Array:
+        """Gradient allreduce over the data axes (callable inside `run`).
+
+        On a hierarchical communicator this is the two-level path: `wire`
+        selects the fabric leg, `wire_intra` the intra-node legs (defaults
+        to bf16 when the fabric is lossy, fp32 otherwise).
+        """
+        if not self.hierarchical:
+            return allreduce(x, self.data_axes, wire=wire, mean=mean)
+        from repro.core import hier as hier_lib
+        if wire_intra is None:
+            wire_intra = hier_lib.default_wire_intra(wire)
+        spec = self.hier_spec(wire_intra=wire_intra, wire_inter=wire)
+        return hier_lib.hier_allreduce(x, spec, mean=mean)

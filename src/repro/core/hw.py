@@ -43,6 +43,8 @@ class Link:
 # --- reproduction target: TPU v5e ------------------------------------------
 TPU_V5E = Chip("tpu-v5e", peak_flops=197e12, mem_bw=819e9, mem_bytes=16e9)
 ICI_LINK = Link("ici", bw=50e9, latency=1e-6)
+# inter-pod data-center network: the slow fabric of the TPU hierarchy
+DCN_LINK = Link("dcn", bw=6.25e9, latency=50e-6)
 
 # --- paper platforms ---------------------------------------------------------
 # 2-socket Xeon Gold 6148: 2 x 20 cores x 2.4 GHz x 32 SP FLOP/cycle ~ 6.1 TF
@@ -51,6 +53,38 @@ XEON_6148 = Chip("xeon-6148-2s", peak_flops=6.1e12, mem_bw=2 * 128e9,
                  mem_bytes=192e9, sustained_frac=0.45)
 ETH_10G = Link("10gbe", bw=1.25e9, latency=30e-6)
 OMNIPATH = Link("omni-path-100", bw=12.5e9, latency=1.5e-6)
+# intra-node transport (shared memory / QPI): what MLSL's intra-node phase
+# of the two-level allreduce rides on (You et al. 1708.02983 §4)
+SHM_LINK = Link("shm-qpi", bw=40e9, latency=0.3e-6)
+
+
+# --- machine hierarchy -------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Two-level machine hierarchy: `local_size` ranks per node on a fast
+    `intra` link; nodes connected by the slower `inter` fabric."""
+
+    name: str
+    intra: Link
+    inter: Link
+    local_size: int
+
+    def flat_size(self, nodes: int) -> int:
+        return nodes * self.local_size
+
+
+# canonical hierarchies
+CLOUD_10G = Topology("xeon-shm-10gbe", intra=SHM_LINK, inter=ETH_10G,
+                     local_size=4)
+HPC_OPA = Topology("xeon-shm-opa", intra=SHM_LINK, inter=OMNIPATH,
+                   local_size=4)
+TPU_MULTIPOD = Topology("v5e-ici-dcn", intra=ICI_LINK, inter=DCN_LINK,
+                        local_size=256)
+
+# by-name lookup for config surfaces (train.CommConfig.topo stays a plain
+# string so configs remain hashable/serializable)
+TOPOLOGIES = {t.name: t for t in (CLOUD_10G, HPC_OPA, TPU_MULTIPOD)}
 
 
 # --- collective time models --------------------------------------------------
@@ -86,6 +120,28 @@ def all_to_all_time(nbytes: float, p: int, link: Link) -> float:
         return 0.0
     steps = p - 1
     return steps * link.latency + nbytes * (p - 1) / p / link.bw
+
+
+def hier_allreduce_time(nbytes: float, nodes: int, topo: Topology) -> float:
+    """Two-level allreduce over `nodes` nodes of `topo.local_size` ranks.
+
+    intra-node reduce-scatter (full volume, fast link) + inter-node ring
+    allreduce on nbytes/local_size (slow fabric) + intra-node all-gather.
+    Reduces the fabric volume by local_size vs `flat_allreduce_time`.
+    """
+    local = topo.local_size
+    if nbytes <= 0 or topo.flat_size(nodes) <= 1:
+        return 0.0
+    t = reduce_scatter_time(nbytes, local, topo.intra)
+    t += ring_allreduce_time(nbytes / max(local, 1), nodes, topo.inter)
+    t += all_gather_time(nbytes, local, topo.intra)
+    return t
+
+
+def flat_allreduce_time(nbytes: float, nodes: int, topo: Topology) -> float:
+    """Single-level ring over all nodes*local ranks: every hop is paced by
+    the slowest link in the ring, i.e. the fabric."""
+    return ring_allreduce_time(nbytes, topo.flat_size(nodes), topo.inter)
 
 
 def latency_bound_fraction(nbytes: float, p: int, link: Link) -> float:

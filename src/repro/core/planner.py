@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import c2c
+from repro.core import c2c, hw
 
 # Parameter kinds understood by the planner.
 K_EMBED = "embed"            # (vocab, d)
@@ -235,6 +235,31 @@ def make_planner(mesh: Mesh, n_params: float, *, train: bool = True,
                        bytes_per_param_state=bytes_per_param_state,
                        hbm_budget=hbm_budget)
     return Planner(mesh=mesh, fsdp=fsdp)
+
+
+# --- flat vs hierarchical collective choice (machine-hierarchy planning) -----
+
+ALGO_FLAT = "flat"
+ALGO_HIER = "hier"
+
+
+def choose_allreduce_algo(nbytes: float, nodes: int,
+                          topo: hw.Topology) -> str:
+    """Pick flat vs two-level allreduce for one message from the per-level
+    bandwidth/latency model (repro.core.hw).
+
+    The hierarchy wins when the fabric-volume saving (1/local_size of the
+    bytes cross the slow link) beats the two extra intra-node phases; for
+    tiny latency-bound messages on shallow hierarchies the flat ring can
+    still be cheaper. The bucket scheduler applies this per fused message
+    (scheduler.route_buckets), and the trainer routes each bucket through
+    it when `CommConfig(hier=True, topo=...)` names a topology.
+    """
+    if topo.local_size <= 1 or nodes <= 1:
+        return ALGO_FLAT
+    t_flat = hw.flat_allreduce_time(nbytes, nodes, topo)
+    t_hier = hw.hier_allreduce_time(nbytes, nodes, topo)
+    return ALGO_HIER if t_hier < t_flat else ALGO_FLAT
 
 
 # --- the per-layer strategy report (the paper's Table-1-style view) ----------

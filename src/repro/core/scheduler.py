@@ -164,6 +164,23 @@ def reduce_with_priority(grad_tree, reduce_fn: Callable[[jax.Array, Bucket], jax
     return jax.tree_util.tree_unflatten(plan.treedef, new_leaves)
 
 
+def route_buckets(plan: BucketPlan, topo, nodes: int, *,
+                  bytes_per_elem: float = 4.0) -> tuple:
+    """Per-bucket flat-vs-hierarchical routing over a machine hierarchy.
+
+    For each fused message, asks the per-level cost model which allreduce
+    decomposition is cheaper on `topo` (repro.core.hw.Topology) with `nodes`
+    inter-node ranks. Returns one of planner.ALGO_FLAT / ALGO_HIER per
+    bucket, in plan order -- the structural analog of MLSL choosing its
+    intra/inter phase split per message. Small, latency-bound urgent buckets
+    can legitimately route flat while bulk buckets go hierarchical.
+    """
+    from repro.core import planner as pl
+    return tuple(
+        pl.choose_allreduce_algo(b.n_elems * bytes_per_elem, nodes, topo)
+        for b in plan.buckets)
+
+
 def chain_barrier(values, token):
     """Expose the token-threading primitive for other schedulers (serving,
     activation prioritization in model/hybrid parallelism)."""

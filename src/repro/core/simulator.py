@@ -72,17 +72,33 @@ class _Job:
 
 
 def _allreduce_durations(layers: Sequence[SimLayer], p: int, link: hw.Link,
-                         overlap_eff: float = 1.0) -> list:
-    """Per-layer ring allreduce service times.
+                         overlap_eff: float = 1.0,
+                         topo: hw.Topology | None = None,
+                         comm_algo: str = "auto") -> list:
+    """Per-layer allreduce service times.
 
     `overlap_eff` (0 < eta <= 1) models imperfect asynchronous progress:
     transfers overlapped with compute share host resources (progress thread
     cycles, memory bandwidth, PCIe) and achieve only eta of the wire rate --
     the effect MLSL's dedicated progress cores mitigate but do not remove.
     Applied uniformly to both policies, so policy comparisons stay fair.
+
+    With a `topo` (two-level machine hierarchy), `p` counts NODES and each
+    layer's time is the flat ring over the fabric, the two-level
+    decomposition, or the per-message cost-model choice (`comm_algo` in
+    {"flat", "hier", "auto"}) -- how plans weigh hierarchical collectives.
     """
-    return [hw.ring_allreduce_time(l.wgrad_bytes, p, link) / overlap_eff
-            for l in layers]
+    if topo is None:
+        return [hw.ring_allreduce_time(l.wgrad_bytes, p, link) / overlap_eff
+                for l in layers]
+    out = []
+    for l in layers:
+        t_flat = hw.flat_allreduce_time(l.wgrad_bytes, p, topo)
+        t_hier = hw.hier_allreduce_time(l.wgrad_bytes, p, topo)
+        t = {"flat": t_flat, "hier": t_hier,
+             "auto": min(t_flat, t_hier)}[comm_algo]
+        out.append(t / overlap_eff)
+    return out
 
 
 def _serve_fifo(jobs: Sequence[_Job]) -> list:
@@ -139,18 +155,25 @@ def _serve_priority(jobs: Sequence[_Job]) -> list:
 def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
                        policy: Policy = Policy.PRIORITY_OVERLAP,
                        record_timeline: bool = False,
-                       overlap_eff: float = 1.0) -> IterationStats:
+                       overlap_eff: float = 1.0,
+                       topo: hw.Topology | None = None,
+                       comm_algo: str = "auto") -> IterationStats:
     """Simulate bwd(iter k) + allreduce + fwd(iter k+1) under a policy.
 
     Backward runs layers L-1..0; layer i's allreduce becomes ready when its
     bwd completes. The next forward runs layers 0..L-1 and layer i's forward
     cannot start before its allreduce completed (weights must be updated) --
     exactly the dependency structure the paper exploits.
+
+    With `topo`, `p` counts nodes of `topo.local_size` ranks and the
+    collectives are costed on the two-level hierarchy (`comm_algo` selects
+    flat / hier / per-message auto); `link` is then ignored.
     """
     n = len(layers)
     compute = sum(l.fwd_time + l.bwd_time for l in layers)
     durations = _allreduce_durations(layers, p, link,
-                                     overlap_eff=overlap_eff)
+                                     overlap_eff=overlap_eff,
+                                     topo=topo, comm_algo=comm_algo)
     timeline = []
 
     if policy is Policy.BLOCKING:
@@ -198,14 +221,22 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
 
 
 def scaling_efficiency(layers: Sequence[SimLayer], p: int, link: hw.Link,
-                       policy: Policy = Policy.PRIORITY_OVERLAP) -> float:
+                       policy: Policy = Policy.PRIORITY_OVERLAP,
+                       topo: hw.Topology | None = None,
+                       comm_algo: str = "auto") -> float:
     """Weak-scaling efficiency at p nodes (fixed per-node mini-batch).
 
     efficiency = compute-only time / simulated iteration time.
+
+    With a `topo`, p counts NODES: a single node still holds
+    topo.local_size communicating ranks, so p == 1 is only trivially
+    efficient when the whole hierarchy is one rank.
     """
-    if p <= 1:
+    ranks = topo.flat_size(p) if topo is not None else p
+    if ranks <= 1:
         return 1.0
-    stats = simulate_iteration(layers, p, link, policy)
+    stats = simulate_iteration(layers, p, link, policy, topo=topo,
+                               comm_algo=comm_algo)
     return stats.compute_time / stats.total_time
 
 

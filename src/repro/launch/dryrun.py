@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import registry
 from repro.configs.base import (ModelConfig, active_param_count_estimate,
                                 param_count_estimate)
@@ -315,8 +316,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     if minipod:
         # 64-chip (8, 8) analysis mesh: used for wire-format studies where
         # XLA:CPU cannot compile the manual-mode pattern at 512 partitions
-        mesh = jax.make_mesh((8, 8), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((8, 8), ("data", "model"),
+                                axis_types=(compat.AxisType.Auto,) * 2)
         mesh_name = "minipod8x8"
     else:
         mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
@@ -361,7 +362,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "temp_bytes": int(ma.temp_size_in_bytes),
         "generated_code_bytes": int(ma.generated_code_size_in_bytes),
     }
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     cost_full = {k: float(ca.get(k, 0.0)) for k in ("flops", "bytes accessed")}
     rec["cost_full"] = cost_full
 
@@ -371,7 +372,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         bfn, bargs = build_block_step(cfg, shape, mesh, planner, comm,
                                       shape.kind)
         bcompiled = jax.jit(bfn).lower(*bargs).compile()
-        bca = bcompiled.cost_analysis() or {}
+        bca = compat.cost_analysis(bcompiled)
         cost_block = {k: float(bca.get(k, 0.0))
                       for k in ("flops", "bytes accessed")}
         rec["cost_block"] = cost_block

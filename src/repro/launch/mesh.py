@@ -19,18 +19,36 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=(compat.AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many (possibly fake) devices exist locally."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+
+
+def make_hier_mesh(node: int = 2, local: int = 4,
+                   model: int = 1) -> jax.sharding.Mesh:
+    """Factored data-parallel mesh for hierarchical collectives.
+
+    ``node`` is the inter-node (fabric) axis, ``local`` the intra-node
+    (high-bandwidth) axis; gradient reduction runs two-level over
+    ("node", "local"). ``model=1`` keeps a model axis for hybrid plans.
+    """
+    if model > 1:
+        return compat.make_mesh((node, local, model),
+                                ("node", "local", "model"),
+                                axis_types=(compat.AxisType.Auto,) * 3)
+    return compat.make_mesh((node, local), ("node", "local"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
 
 
 def n_chips(mesh: jax.sharding.Mesh) -> int:

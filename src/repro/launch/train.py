@@ -19,6 +19,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.checkpoint import ckpt
 from repro.configs import registry
 from repro.core.planner import Planner
@@ -46,6 +47,16 @@ def main():
     ap.add_argument("--no-prioritize", action="store_true")
     ap.add_argument("--data-parallel", type=int, default=1)
     ap.add_argument("--model-parallel", type=int, default=1)
+    # two-level collectives over a ("node", "local") factored mesh; needs
+    # node*local devices (or XLA_FLAGS=--xla_force_host_platform_device_count)
+    ap.add_argument("--hier", action="store_true")
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--local", type=int, default=4)
+    ap.add_argument("--wire-intra", default=None,
+                    choices=[None, "fp32", "bf16"])
+    # name a machine hierarchy (repro.core.hw.TOPOLOGIES) to let the
+    # per-level cost model route each bucket flat vs two-level
+    ap.add_argument("--topo", default=None)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -54,17 +65,24 @@ def main():
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))
     model = Model(cfg)
-    mesh = mesh_lib.make_host_mesh(args.data_parallel, args.model_parallel)
+    if args.hier:
+        mesh = mesh_lib.make_hier_mesh(args.nodes, args.local,
+                                       args.model_parallel)
+    else:
+        mesh = mesh_lib.make_host_mesh(args.data_parallel,
+                                       args.model_parallel)
     planner = Planner(mesh=mesh)
     lr = schedules.warmup_cosine(args.lr, max(args.steps // 10, 1), args.steps)
     optimizer = opt_lib.make_optimizer(args.optimizer, lr)
     comm = tr.CommConfig(mode=args.comm, wire=args.wire,
                          prioritize=not args.no_prioritize,
-                         error_feedback=args.error_feedback)
+                         error_feedback=args.error_feedback,
+                         hier=args.hier, wire_intra=args.wire_intra,
+                         topo=args.topo)
     dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                global_batch=args.batch, seed=args.seed)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = tr.make_train_state(model, optimizer,
                                     jax.random.PRNGKey(args.seed))
         step_fn = jax.jit(tr.make_train_step(model, optimizer, mesh, planner,

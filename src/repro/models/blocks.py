@@ -92,6 +92,9 @@ class BlockCtx:
     batch_axes: tuple = ("data",)
     fsdp_axes: tuple = ()
     wgather_wire: str = "bf16"      # int8: quantized ZeRO weight gathers
+    # python-unroll the block scan: required inside partial-manual shard_map
+    # regions on JAX 0.4.x (compat.PARTIAL_MANUAL_SCAN_OK)
+    unroll: bool = False
 
     def window_for(self, kind: str):
         a = self.cfg.attn

@@ -28,7 +28,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import collectives, scheduler
+from repro import compat
+from repro.core import collectives, hw, scheduler
+from repro.core import hier as hier_lib
+from repro.core import planner as planner_lib
 from repro.core.planner import Planner
 from repro.models.transformer import Batch, Model
 from repro.optim import optimizers as opt_lib
@@ -46,6 +49,16 @@ class CommConfig:
     kv_chunk: int = 0                # >0: online-softmax attention chunking
     wgather_wire: str = "bf16"       # int8: quantized ZeRO weight gathers (ep)
     kv_dtype: str = "native"         # int8: quantized GQA KV cache (serving)
+    # two-level collectives over a ("node", "local") factored data dimension
+    # (repro.core.hier): `wire` selects the inter-node fabric leg and
+    # `wire_intra` the intra-node legs (None: hier.default_wire_intra).
+    # `topo` optionally names a machine hierarchy (repro.core.hw.TOPOLOGIES);
+    # when set, each fused bucket is routed flat vs two-level by the
+    # per-level cost model (scheduler.route_buckets) instead of always
+    # taking the hierarchical path.
+    hier: bool = False
+    wire_intra: Optional[str] = None
+    topo: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -104,12 +117,24 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
     data_axes = planner.batch_axes
     fsdp_axes = planner.batch_axes if planner.fsdp else ()
 
+    # mlsl mode runs the step in a shard_map manual over the batch axes; if
+    # any OTHER mesh axis is >1 the region is PARTIAL-manual, which on JAX
+    # 0.4.x cannot contain scan loops (compat.PARTIAL_MANUAL_SCAN_OK) --
+    # unroll the block/accum scans there (pattern_repeats is small for the
+    # smoke configs this CPU path runs; mesh-scale dry-runs use gspmd).
+    partial_manual = any(mesh.shape[a] > 1 for a in mesh.axis_names
+                         if a not in data_axes)
+    unroll_scans = (comm.mode == "mlsl" and partial_manual
+                    and not compat.PARTIAL_MANUAL_SCAN_OK)
+
     loss_kw = dict(moe_impl=comm.moe_impl, mesh=mesh,
                    batch_axes=data_axes, fsdp_axes=fsdp_axes,
                    wgather_wire=comm.wgather_wire) \
         if comm.moe_impl == "ep" else {}
     if comm.kv_chunk:
         loss_kw["kv_chunk"] = comm.kv_chunk
+    if unroll_scans:
+        loss_kw["unroll"] = True
 
     def loss_fn(params, batch: Batch):
         return model.loss(params, batch, **loss_kw)
@@ -136,7 +161,8 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
                 lambda a, b: a + b.astype(jnp.float32), gsum, g)
             return (gsum, lsum + loss), None
 
-        (gsum, lsum), _ = jax.lax.scan(body, (gz, jnp.zeros(())), micro)
+        (gsum, lsum), _ = compat.maybe_scan(body, (gz, jnp.zeros(())), micro,
+                                            unroll=unroll_scans)
         grads = jax.tree_util.tree_map(
             lambda g, pp: (g / acc).astype(pp.dtype), gsum, params)
         return lsum / acc, grads
@@ -206,11 +232,66 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
 
     use_ef = comm.error_feedback and comm.wire == collectives.WIRE_INT8
 
+    use_hier = comm.hier
+    if use_hier:
+        assert hier_lib.NODE_AXIS in data_axes and \
+            hier_lib.LOCAL_AXIS in data_axes, (
+                "comm.hier needs the data dimension factored over "
+                f"({hier_lib.NODE_AXIS!r}, {hier_lib.LOCAL_AXIS!r}) mesh "
+                f"axes (launch.mesh.make_hier_mesh); got {data_axes}")
+        wire_intra = comm.wire_intra or hier_lib.default_wire_intra(comm.wire)
+        hier_spec = hier_lib.HierSpec(
+            wire_intra=wire_intra, wire_inter=comm.wire,
+            error_feedback=use_ef)
+        n_node = mesh.shape[hier_lib.NODE_AXIS]
+        n_local = mesh.shape[hier_lib.LOCAL_AXIS]
+        if comm.topo is not None:
+            if comm.topo not in hw.TOPOLOGIES:
+                raise ValueError(
+                    f"unknown topology {comm.topo!r}; known: "
+                    f"{sorted(hw.TOPOLOGIES)}")
+            # per-bucket flat-vs-two-level routing from the per-level cost
+            # model: small latency-bound buckets may stay flat while bulk
+            # buckets take the hierarchy (MLSL per-message phase choice)
+            bucket_algos = scheduler.route_buckets(
+                plan, hw.TOPOLOGIES[comm.topo], nodes=n_node)
+        else:
+            bucket_algos = tuple(planner_lib.ALGO_HIER
+                                 for _ in plan.buckets)
+    else:
+        bucket_algos = tuple(planner_lib.ALGO_FLAT for _ in plan.buckets)
+
+    def _bucket_hier(bi: int) -> bool:
+        return bucket_algos[bi] == planner_lib.ALGO_HIER
+
     def init_residuals():
+        """Global-view zero residuals: per-rank shard shape x dp ranks (the
+        shard_map in_spec splits them back to one fabric shard per rank)."""
         if not use_ef:
             return None
-        return tuple(jnp.zeros(collectives.ef_residual_shape(b.n_elems, dp),
-                               jnp.float32) for b in plan.buckets)
+
+        def shard(bi, b):
+            if _bucket_hier(bi):
+                return hier_lib.ef_residual_shape(b.n_elems, n_local,
+                                                  n_node)[0]
+            return collectives.ef_residual_shape(b.n_elems, dp)[0]
+
+        return tuple(jnp.zeros((shard(bi, b) * dp,), jnp.float32)
+                     for bi, b in enumerate(plan.buckets))
+
+    def _reduce_flat(flat, residual, bi):
+        """One fused message over the data axes: flat or two-level path per
+        the bucket routing. Returns (reduced, new_residual_or_None)."""
+        if _bucket_hier(bi):
+            if use_ef:
+                return hier_lib.hier_allreduce_ef(flat, residual, hier_spec,
+                                                  mean=True)
+            return hier_lib.hier_allreduce(flat, hier_spec, mean=True), None
+        if use_ef:
+            return collectives.allreduce_ef(flat, residual, data_axes,
+                                            mean=True)
+        return collectives.allreduce(flat, data_axes, wire=comm.wire,
+                                     mean=True), None
 
     def _reduce_buckets(grads, residuals):
         """Fused, prioritized, wire-precision gradient exchange.
@@ -229,13 +310,11 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
                 flat = scheduler.fuse_bucket(leaves, bucket)
                 if comm.prioritize:
                     flat, token = scheduler.chain_barrier(flat, token)
+                red, res = _reduce_flat(flat,
+                                        residuals[bi] if use_ef else None,
+                                        bi)
                 if use_ef:
-                    red, res = collectives.allreduce_ef(
-                        flat, residuals[bi], data_axes, mean=True)
                     new_residuals.append(res)
-                else:
-                    red = collectives.allreduce(flat, data_axes,
-                                                wire=comm.wire, mean=True)
                 if comm.prioritize:
                     token = scheduler._token_of(red)
                 for lid, leaf in scheduler.unfuse_bucket(red, bucket).items():
@@ -285,7 +364,7 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
         if use_ef and residuals is None:
             residuals = init_residuals()
 
-        out = jax.shard_map(
+        out = compat.shard_map(
             inner, mesh=mesh,
             in_specs=(params_specs, opt_specs, replicated, res_spec,
                       batch_in_specs),

@@ -1,12 +1,16 @@
 """Chunked (online-softmax) attention equals dense attention at the model
 level, across mixers and masking modes (the §Perf B1 optimization)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.configs import registry
 from repro.models import attention as A
