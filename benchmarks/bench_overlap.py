@@ -1,73 +1,156 @@
-"""Paper claims #4/#5 (C1-C4): the compute-to-communication ratio analysis
-and its consequences.
+"""Measured vs modeled compute/communication overlap of the CommEngine (C4).
 
-  1. C2C ratio is proportional to mini-batch (motivates large-batch, C3) and
-     INDEPENDENT of kernel size / feature counts / stride for data-parallel
-     conv layers (the Das et al. analysis the paper builds on);
-  2. per-layer strategy table: what the DL Layer API picks (data / model /
-     hybrid + node-group size) for conv vs FC layers of the paper's CNNs and
-     for transformer blocks of the assigned archs (C2);
-  3. overlap benefit: blocking vs FIFO vs priority exposed-comm across the
-     batch sweep (C4).
+The paper's runtime centerpiece is dedicated communication progress that
+overlaps gradient exchange with compute (endpoint servers). The CommEngine
+expresses the same thing statically: with microbatch accumulation, microbatch
+k's priority-chained buckets reduce interleaved with microbatch k+1's
+forward/backward (`CommConfig(overlap=True)` — repro.core.engine,
+train.trainer). This benchmark runs the REAL mlsl train step on the
+8-virtual-device ("node"=2, "local"=4) CPU mesh and times three variants:
+
+  * overlap off  -- blocking baseline: each microbatch's reduction chain
+                    must retire before the next microbatch computes;
+  * overlap on   -- the engine's software pipeline;
+  * skip_reduce  -- compute-only floor (no gradient exchange at all).
+
+measured exposed comm(mode) = t_step(mode) - t_step(skip_reduce), and the
+measured reduction is exposed(off)/exposed(on). Side by side it emits the
+simulator's overlap-aware bucket-schedule prediction
+(planner.estimate_overlap over the engine's own EnginePlan, costed on the
+canonical CLOUD_10G hierarchy with the measured compute floor as the
+per-microbatch compute time). XLA:CPU executes collectives inline on the
+host's shared cores, so the measured reduction is expected well below the
+modeled one: the modeled number is what a fabric with real asynchronous
+progress recovers (MLSL's EP-server claim), the measured one what this host
+actually overlaps — the gap itself is the paper's argument for dedicated
+progress resources.
+
+Run as a script (so the XLA device-count flag lands before jax imports):
+
+  PYTHONPATH=src:. python benchmarks/bench_overlap.py [--smoke]
+
+If jax was already imported with fewer devices (benchmarks/run.py), the
+measured sweep emits a "skipped" line and only the modeled estimate runs.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import emit, time_fn
-from repro.configs import cnn_tables
-from repro.core import c2c, hw, planner, simulator as sim
+import os
+import sys
+
+if __name__ == "__main__" and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    # must be set before jax import (SNIPPETS.md idiom)
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, fmt_exposed, reduction_ratio, time_fn
+from repro import compat
+from repro.core import hw
+from repro.core import planner as planner_lib
+from repro.core.planner import Planner
+from repro.configs import registry
+from repro.data import pipeline
+from repro.launch import mesh as mesh_lib
+from repro.models.transformer import Batch, Model
+from repro.optim import optimizers as opt_lib
+from repro.train import trainer as tr
+
+ARCH = "yi-6b"
+NODES, LOCAL = 2, 4
+SEQ = 32
 
 
-def run():
-    # 1 -- proportionality + invariance
-    base = c2c.conv_layer("conv", 256, 256, 3, 14, 14)
-    for b in (16, 64, 256):
-        r = c2c.data_parallel_ratio(base, b, 64)
-        emit(f"c2c/batch{b}", 0.0, f"ratio={r:.1f}")
-    r0 = c2c.data_parallel_ratio(base, 64, 64)
-    variants = {
-        "kernel5": c2c.conv_layer("conv", 256, 256, 5, 14, 14),
-        "feat512": c2c.conv_layer("conv", 512, 512, 3, 14, 14),
-        "stride2": c2c.conv_layer("conv", 256, 256, 3, 14, 14, stride=2),
-    }
-    for name, v in variants.items():
-        r = c2c.data_parallel_ratio(v, 64, 64)
-        emit(f"c2c/invariance/{name}", 0.0,
-             f"ratio={r:.1f};base={r0:.1f};equal={abs(r - r0) < 1e-6}")
+def _step_us(model, opt, mesh, pln, comm, batch, iters):
+    """Median per-step wall time (us) of a compiled train step."""
+    with compat.set_mesh(mesh):
+        state = tr.make_train_state(model, opt, jax.random.PRNGKey(0))
+        step = jax.jit(tr.make_train_step(model, opt, mesh, pln, comm))
+        return time_fn(lambda: step(state, batch)[1]["loss"], iters=iters)
 
-    # 2 -- strategy table (the DL Layer API decision, paper C2)
-    p = 64
-    for topo in ("resnet50", "vgg16"):
-        layers = cnn_tables.TOPOLOGIES[topo]()
-        report = planner.plan_report(layers, batch=2048, p=p)
-        counts = {}
-        fc_choice = None
-        for lp in report:
-            counts[lp.choice.strategy.value] = counts.get(
-                lp.choice.strategy.value, 0) + 1
-            if lp.kind == "fc" and fc_choice is None:
-                fc_choice = lp.choice
-        emit(f"c2c/strategy/{topo}", 0.0,
-             f"counts={counts};first_fc={fc_choice.strategy.value}"
-             f"@g{fc_choice.group_size}")
 
-    # 3 -- overlap benefit across the batch sweep
-    specs = cnn_tables.resnet50_layers()
-    for bs in (16, 32, 64):
-        layers = sim.layers_from_specs(specs, bs, hw.XEON_6148)
-        us = time_fn(lambda: sim.simulate_iteration(
-            layers, 64, hw.ETH_10G, sim.Policy.BLOCKING), iters=3)
-        vals = {}
-        for pol in sim.Policy:
-            st = sim.simulate_iteration(layers, 64, hw.ETH_10G, pol,
-                                        overlap_eff=0.7)
-            vals[pol.value] = st.exposed_comm
-        emit(f"overlap/resnet50/bs{bs}", us,
-             ";".join(f"exposed_{k}={v*1e3:.1f}ms" for k, v in vals.items()))
+def run(smoke: bool = False):
+    accums = (2,) if smoke else (2, 4)
+    iters = 3 if smoke else 5
+    if jax.device_count() < NODES * LOCAL:
+        emit("overlap/engine", 0.0,
+             f"skipped=needs {NODES * LOCAL} devices "
+             f"(run as a script); have {jax.device_count()}")
+        measured = False
+    else:
+        measured = True
+        mesh = mesh_lib.make_hier_mesh(node=NODES, local=LOCAL)
+        cfg = registry.get_smoke_config(ARCH)
+        model = Model(cfg)
+        opt = opt_lib.sgd_momentum(1e-3)
+        pln = Planner(mesh=mesh)
+
+    for acc in accums:
+        base = dict(mode="mlsl", wire="fp32", accum_steps=acc)
+        n_micro = acc
+        if measured:
+            gb = NODES * LOCAL * acc      # one sample per device-microbatch
+            dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=SEQ,
+                                       global_batch=gb)
+            raw = next(iter(pipeline.iterate(dcfg, 1)))
+            batch = Batch(tokens=jnp.asarray(raw["tokens"]),
+                          labels=jnp.asarray(raw["labels"]))
+            t_floor = _step_us(model, opt, mesh, pln,
+                               tr.CommConfig(**base, skip_reduce=True),
+                               batch, iters)
+            t_off = _step_us(model, opt, mesh, pln,
+                             tr.CommConfig(**base, overlap=False),
+                             batch, iters)
+            t_on = _step_us(model, opt, mesh, pln,
+                            tr.CommConfig(**base, overlap=True),
+                            batch, iters)
+            exp_off = (t_off - t_floor) * 1e-6               # seconds
+            exp_on = (t_on - t_floor) * 1e-6
+            # on a loaded CPU host the comm cost can sit inside the timing
+            # noise; a ratio of noise over noise would be meaningless
+            noisy = exp_off <= 0 or exp_on <= 0
+            measured_red = reduction_ratio(exp_off, exp_on)
+            # the engine's own plan feeds the modeled estimate
+            engine = tr.make_comm_engine(model, mesh, pln,
+                                         tr.CommConfig(**base, overlap=True))
+            micro_compute = t_floor * 1e-6 / n_micro
+        else:
+            # modeled-only fallback: a representative smoke-size plan
+            cfg = registry.get_smoke_config(ARCH)
+            model = Model(cfg)
+            mesh11 = compat.make_mesh(
+                (1, 1), ("data", "model"),
+                axis_types=(compat.AxisType.Auto,) * 2)
+            engine = tr.make_comm_engine(
+                model, mesh11, Planner(mesh=mesh11),
+                tr.CommConfig(mode="mlsl", accum_steps=acc, overlap=True))
+            micro_compute = 5e-3
+
+        off, on = planner_lib.estimate_overlap(
+            engine.plan.buckets.buckets, engine.plan.algos, NODES,
+            hw.CLOUD_10G, n_micro, micro_compute)
+        modeled_red = reduction_ratio(off.exposed_comm, on.exposed_comm)
+        derived = (fmt_exposed({"model_block": off.exposed_comm,
+                                "model_overlap": on.exposed_comm})
+                   + f";modeled_reduction={modeled_red:.2f}x"
+                   + f";buckets={engine.plan.n_buckets}")
+        if measured:
+            measured_field = ("measured_reduction=below_noise_floor" if noisy
+                              else f"measured_reduction={measured_red:.2f}x")
+            derived = (f"t_floor={t_floor * 1e-3:.1f}ms;"
+                       f"t_block={t_off * 1e-3:.1f}ms;"
+                       f"t_overlap={t_on * 1e-3:.1f}ms;"
+                       + fmt_exposed({"block": exp_off, "overlap": exp_on})
+                       + f";{measured_field};" + derived)
+        emit(f"overlap/engine/micro{n_micro}",
+             t_on if measured else 0.0, derived)
 
 
 def main():
-    run()
+    run(smoke="--smoke" in sys.argv)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ explained hypothesis -- see EXPERIMENTS.md.
 
 from __future__ import annotations
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, fmt_exposed, reduction_ratio, time_fn
 from repro.configs import cnn_tables
 from repro.core import hw, simulator as sim
 
@@ -53,14 +53,13 @@ def run():
             blocking = sim.simulate_iteration(layers, p, hw.ETH_10G,
                                               sim.Policy.BLOCKING,
                                               overlap_eff=OVERLAP_EFF)
-            red = (fifo.exposed_comm / prio.exposed_comm
-                   if prio.exposed_comm > 1e-9 else float("inf"))
+            red = reduction_ratio(fifo.exposed_comm, prio.exposed_comm)
             results[(topo, p)] = red
             emit(f"prioritization/{topo}/n{p}", us,
-                 f"exposed_fifo={fifo.exposed_comm*1e3:.1f}ms;"
-                 f"exposed_prio={prio.exposed_comm*1e3:.1f}ms;"
-                 f"exposed_blocking={blocking.exposed_comm*1e3:.1f}ms;"
-                 f"reduction={red:.2f}x")
+                 fmt_exposed({"fifo": fifo.exposed_comm,
+                              "prio": prio.exposed_comm,
+                              "blocking": blocking.exposed_comm})
+                 + f";reduction={red:.2f}x")
     op = [results[(t, OPERATING_POINT[t])] for t in cnn_tables.TOPOLOGIES]
     emit("prioritization/summary", 0.0,
          f"operating_point_reductions="

@@ -1,4 +1,4 @@
-"""Shared benchmark plumbing: CSV emission + timing."""
+"""Shared benchmark plumbing: CSV emission, timing, exposed-comm metrics."""
 
 from __future__ import annotations
 
@@ -7,6 +7,21 @@ import time
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def fmt_exposed(exposed_by_key: dict) -> str:
+    """The shared ``exposed_<policy>=<ms>`` metric spelling (one key per
+    scheduling policy/mode), used by every overlap-family benchmark."""
+    return ";".join(f"exposed_{k}={v * 1e3:.1f}ms"
+                    for k, v in exposed_by_key.items())
+
+
+def reduction_ratio(baseline: float, improved: float) -> float:
+    """exposed-comm reduction, baseline/improved, inf-safe (the paper's
+    headline metric shape: 'N.Nx reduction in exposed communication')."""
+    if improved <= 1e-9:
+        return float("inf") if baseline > 1e-9 else 1.0
+    return baseline / improved
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:

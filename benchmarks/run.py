@@ -3,7 +3,7 @@
   bench_prioritization -- 1.8-2.2x exposed-comm reduction (Xeon+10GbE)
   bench_scaling        -- Fig. 2 ResNet-50/Omni-Path scaling + TF/Horovod
   bench_quantization   -- low-precision wire formats (volume/fidelity/kernel)
-  bench_overlap        -- C2C ratio analysis + overlap policies
+  bench_overlap        -- CommEngine overlap: measured vs modeled exposed comm
   bench_collectives    -- collectives-API microbench + modeled pod times
   bench_roofline       -- roofline terms from the dry-run artifacts
 

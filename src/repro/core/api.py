@@ -4,10 +4,14 @@ One object ties the library together the way MLSL's `Session`/`Distribution`
 did for Caffe/TF/nGraph:
 
   * the *collectives* interface  -> `session.comm` (repro.core.collectives)
+  * the *engine* interface       -> `session.comm_engine(model)` builds the
+    CommEngine (repro.core.engine) that owns the model's whole bucket-
+    reduction data path: bucket plan, flat-vs-hier routing, wire precision,
+    error feedback, priority chain, overlap.
   * the *DL Layer* interface     -> `session.planner` picks per-layer
     partitioning from the C2C analysis and emits parameter/activation
-    shardings; `session.make_train_step()` wires the priority scheduler and
-    wire-precision into the training step.
+    shardings; `session.make_train_step()` wires the engine into the
+    training step.
 
 This is also the integration surface a framework would adopt (the paper
 integrates MLSL into Caffe/TensorFlow-Horovod/nGraph with exactly this kind
@@ -22,6 +26,7 @@ from typing import Optional
 import jax
 
 from repro.core import c2c, collectives, hier
+from repro.core.engine import CommEngine
 from repro.core.planner import Planner, make_planner, plan_report
 from repro.models.transformer import Model
 from repro.optim import optimizers as opt_lib
@@ -55,6 +60,15 @@ class Session:
         return collectives.Comm(mesh=self.mesh, data_axes=batch,
                                 model_axis=self.planner.model_axis,
                                 node_axis=node, local_axis=local)
+
+    # --- engine interface -----------------------------------------------------
+
+    def comm_engine(self, model: Model) -> CommEngine:
+        """The CommEngine the train step will run: the model's bucket plan,
+        per-bucket flat-vs-hier routes, and wire/EF/overlap configuration —
+        inspectable ahead of compilation (benchmarks, schedule estimates)."""
+        return tr.make_comm_engine(model, self.mesh, self.planner,
+                                   self.comm_cfg)
 
     # --- DL layer interface ---------------------------------------------------
 

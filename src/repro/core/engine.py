@@ -1,0 +1,309 @@
+"""CommEngine: the unified bucket-reduction data path (paper §2, MLSL EP servers).
+
+MLSL puts every performance decision of the gradient exchange — message
+fusion, per-message algorithm choice, wire precision, prioritization, and
+asynchronous progress — behind one library object so frameworks stay thin.
+This module is that object for the reproduction:
+
+  * ``CommConfig``  -- the declarative knobs (mode, wire precision, bucket
+    size, error feedback, two-level hierarchy, overlap), shared by the
+    trainer, the Session facade, the launch drivers, and the dry-run;
+  * ``EnginePlan``  -- the static plan compiled from a gradient structure +
+    CommConfig + mesh: bucket boundaries (scheduler.plan_buckets), which
+    buckets may travel fused, and each bucket's flat-vs-hierarchical route
+    (scheduler.route_buckets over the hw.Topology cost model);
+  * ``CommEngine``  -- executes the plan inside a shard_map manual region:
+    ``engine.reduce(grads, residuals)`` is the whole exchange, and
+    ``engine.reduce_chained`` threads the optimization_barrier token across
+    calls so reductions issued from consecutive microbatches form one
+    priority chain — the structural analogue of MLSL's endpoint servers
+    making progress on microbatch k's buckets while microbatch k+1 computes
+    (see train.trainer's overlap mode).
+
+Everything the engine runs must be INSIDE a shard_map manual region over
+``data_axes``, same contract as repro.core.collectives / repro.core.hier.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as cl
+from repro.core import hier as hier_lib
+from repro.core import hw
+from repro.core import planner as planner_lib
+from repro.core import scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Declarative communication configuration (consumed by CommEngine and
+    the train-step factory; ``train.trainer.CommConfig`` is this class)."""
+
+    mode: str = "gspmd"              # gspmd | mlsl
+    wire: str = cl.WIRE_FP32
+    prioritize: bool = True
+    bucket_bytes: float = 25e6
+    error_feedback: bool = False     # int8 wire only
+    moe_impl: str = "gather"         # gather | ep  (expert-parallel a2a)
+    accum_steps: int = 1             # microbatch gradient accumulation
+    kv_chunk: int = 0                # >0: online-softmax attention chunking
+    wgather_wire: str = "bf16"       # int8: quantized ZeRO weight gathers (ep)
+    kv_dtype: str = "native"         # int8: quantized GQA KV cache (serving)
+    # two-level collectives over a ("node", "local") factored data dimension
+    # (repro.core.hier): `wire` selects the inter-node fabric leg and
+    # `wire_intra` the intra-node legs (None: hier.default_wire_intra).
+    # `topo` optionally names a machine hierarchy (repro.core.hw.TOPOLOGIES);
+    # when set, each fused bucket is routed flat vs two-level by the
+    # per-level cost model (scheduler.route_buckets) instead of always
+    # taking the hierarchical path.
+    hier: bool = False
+    wire_intra: Optional[str] = None
+    topo: Optional[str] = None
+    # MLSL-style compute/communication overlap (mlsl mode, accum_steps > 1):
+    # microbatch k's buckets are reduced interleaved with microbatch k+1's
+    # forward/backward inside the accumulation scan. With accum_steps == 1
+    # the engine falls back to the single reduce-at-end exchange.
+    overlap: bool = False
+    # Benchmark ablation: skip gradient reduction entirely. The step then
+    # trains on unreduced per-rank gradients (numerically meaningless at
+    # dp > 1) — used only to measure the compute-only floor that exposed-
+    # communication accounting subtracts (benchmarks/bench_overlap.py).
+    skip_reduce: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePlan:
+    """Static description of one model's gradient exchange.
+
+    Built once from the (abstract) gradient structure; everything traced at
+    step time just walks these tuples.
+    """
+
+    buckets: scheduler.BucketPlan
+    algos: tuple                     # planner.ALGO_FLAT|ALGO_HIER per bucket
+    fusable: tuple                   # bool per bucket: may travel flattened
+    data_axes: tuple
+    dp: int                          # total data-parallel ranks
+    wire: str
+    prioritize: bool
+    use_ef: bool
+    hier_spec: Optional[hier_lib.HierSpec]
+    n_node: int                      # 1 when not hierarchical
+    n_local: int
+    overlap: bool
+    accum_steps: int
+    skip_reduce: bool = False
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets.buckets)
+
+    def bucket_bytes_list(self, bytes_per_elem: float = 4.0) -> tuple:
+        return tuple(b.n_elems * bytes_per_elem for b in self.buckets.buckets)
+
+
+def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
+               layer_index: Callable[[tuple], float] | None = None,
+               group_key: Callable[[tuple], object] | None = None,
+               leaf_replicated: Callable[[tuple], bool] | None = None
+               ) -> EnginePlan:
+    """Compile CommConfig + gradient structure + mesh into an EnginePlan.
+
+    `grad_struct` is any pytree of arrays/ShapeDtypeStructs with the
+    gradients' shapes. `group_key(path)` marks sharding groups that must not
+    fuse across; `leaf_replicated(path)` says whether a leaf is fully
+    replicated over the auto axes (only such buckets may travel as one flat
+    message — flattening a model-sharded gradient would reshard it).
+    """
+    if layer_index is None:
+        layer_index = scheduler.default_layer_index
+    plan = scheduler.plan_buckets(grad_struct, layer_index,
+                                  bucket_bytes=comm.bucket_bytes,
+                                  group_key=group_key)
+    leaf_paths = [path for path, _ in
+                  jax.tree_util.tree_leaves_with_path(grad_struct)]
+    if leaf_replicated is None:
+        fusable = tuple(True for _ in plan.buckets)
+    else:
+        fusable = tuple(
+            all(leaf_replicated(leaf_paths[i]) for i in b.leaf_ids)
+            for b in plan.buckets)
+
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    use_ef = comm.error_feedback and comm.wire == cl.WIRE_INT8
+
+    hier_spec = None
+    n_node, n_local = 1, dp
+    if comm.hier:
+        assert hier_lib.NODE_AXIS in data_axes and \
+            hier_lib.LOCAL_AXIS in data_axes, (
+                "comm.hier needs the data dimension factored over "
+                f"({hier_lib.NODE_AXIS!r}, {hier_lib.LOCAL_AXIS!r}) mesh "
+                f"axes (launch.mesh.make_hier_mesh); got {data_axes}")
+        wire_intra = comm.wire_intra or hier_lib.default_wire_intra(comm.wire)
+        hier_spec = hier_lib.HierSpec(wire_intra=wire_intra,
+                                      wire_inter=comm.wire,
+                                      error_feedback=use_ef)
+        n_node = mesh.shape[hier_lib.NODE_AXIS]
+        n_local = mesh.shape[hier_lib.LOCAL_AXIS]
+        if comm.topo is not None:
+            if comm.topo not in hw.TOPOLOGIES:
+                raise ValueError(
+                    f"unknown topology {comm.topo!r}; known: "
+                    f"{sorted(hw.TOPOLOGIES)}")
+            # per-bucket flat-vs-two-level routing from the per-level cost
+            # model: small latency-bound buckets may stay flat while bulk
+            # buckets take the hierarchy (MLSL per-message phase choice)
+            algos = scheduler.route_buckets(plan, hw.TOPOLOGIES[comm.topo],
+                                            nodes=n_node)
+        else:
+            algos = tuple(planner_lib.ALGO_HIER for _ in plan.buckets)
+    else:
+        algos = tuple(planner_lib.ALGO_FLAT for _ in plan.buckets)
+
+    return EnginePlan(buckets=plan, algos=algos, fusable=fusable,
+                      data_axes=tuple(data_axes), dp=dp, wire=comm.wire,
+                      prioritize=comm.prioritize, use_ef=use_ef,
+                      hier_spec=hier_spec, n_node=n_node, n_local=n_local,
+                      overlap=comm.overlap, accum_steps=comm.accum_steps,
+                      skip_reduce=comm.skip_reduce)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommEngine:
+    """Executes an EnginePlan: the single entry point for bucket reduction."""
+
+    plan: EnginePlan
+
+    @classmethod
+    def create(cls, grad_struct, comm: CommConfig, mesh, data_axes,
+               **kw) -> "CommEngine":
+        return cls(plan=build_plan(grad_struct, comm, mesh, data_axes, **kw))
+
+    # -- residual (error-feedback) state -----------------------------------
+
+    def init_residuals(self):
+        """Global-view zero residuals: per-rank shard shape x dp ranks (the
+        shard_map in_spec splits them back to one fabric shard per rank)."""
+        p = self.plan
+        if not p.use_ef:
+            return None
+
+        def shard(bi, b):
+            if p.algos[bi] == planner_lib.ALGO_HIER:
+                return hier_lib.ef_residual_shape(b.n_elems, p.n_local,
+                                                  p.n_node)[0]
+            return cl.ef_residual_shape(b.n_elems, p.dp)[0]
+
+        return tuple(jnp.zeros((shard(bi, b) * p.dp,), jnp.float32)
+                     for bi, b in enumerate(p.buckets.buckets))
+
+    def residual_specs(self, bucket_spec):
+        """shard_map in/out specs for the residual state (None without EF)."""
+        if not self.plan.use_ef:
+            return None
+        return tuple(bucket_spec for _ in self.plan.buckets.buckets)
+
+    # -- the data path ------------------------------------------------------
+
+    def _reduce_bucket(self, flat, residual, bi: int):
+        """One fused message over the data axes: flat or two-level path per
+        the bucket routing. Returns (reduced, new_residual_or_None)."""
+        p = self.plan
+        if p.algos[bi] == planner_lib.ALGO_HIER:
+            if p.use_ef:
+                return hier_lib.hier_allreduce_ef(flat, residual,
+                                                  p.hier_spec, mean=True)
+            return hier_lib.hier_allreduce(flat, p.hier_spec, mean=True), None
+        if p.use_ef:
+            return cl.allreduce_ef(flat, residual, p.data_axes, mean=True)
+        return cl.allreduce(flat, p.data_axes, wire=p.wire, mean=True), None
+
+    def reduce_chained(self, grads, residuals, token):
+        """Fused, prioritized, wire-precision gradient exchange, continuing
+        an existing priority chain.
+
+        Replicated buckets travel as one fused flat message (MLSL message
+        fusion + optional int8 block quantization and error feedback).
+        Model-sharded buckets are reduced per-leaf, shape-preserving (no
+        resharding); the int8 wire's flatten/scatter composition would
+        reshard them, so those leaves use the bf16 wire instead.
+
+        `token` is the optimization_barrier chain carried in from a previous
+        exchange (or None / a constant scalar to start a fresh chain): with
+        prioritization, bucket k+1's message is made data-dependent on bucket
+        k's reduced result, so the compiler issues collectives in forward-
+        layer order across ALL chained calls — in the trainer's overlap mode
+        the chain spans microbatches, ordering microbatch k's reduction ahead
+        of microbatch k+1's without tying it to k+1's compute.
+        Returns (reduced_tree, new_residuals, token).
+        """
+        p = self.plan
+        if p.skip_reduce:
+            return grads, residuals, token
+        leaves = jax.tree_util.tree_leaves(grads)
+        new_leaves = list(leaves)
+        new_residuals = []
+        for bi, bucket in enumerate(p.buckets.buckets):
+            if p.fusable[bi]:
+                flat = scheduler.fuse_bucket(leaves, bucket)
+                if p.prioritize:
+                    flat, token = scheduler.chain_barrier(flat, token)
+                red, res = self._reduce_bucket(
+                    flat, residuals[bi] if p.use_ef else None, bi)
+                if p.use_ef:
+                    new_residuals.append(res)
+                if p.prioritize:
+                    token = scheduler._token_of(red)
+                for lid, leaf in scheduler.unfuse_bucket(red, bucket).items():
+                    new_leaves[lid] = leaf
+            else:
+                vals = [leaves[i] for i in bucket.leaf_ids]
+                if p.prioritize:
+                    vals, token = scheduler.chain_barrier(vals, token)
+                wire = p.wire if p.wire != cl.WIRE_INT8 else cl.WIRE_BF16
+                vals = [cl.allreduce(v, p.data_axes, wire=wire, mean=True)
+                        for v in vals]
+                if p.use_ef:
+                    new_residuals.append(residuals[bi])
+                if p.prioritize:
+                    token = scheduler._token_of(vals[0])
+                for lid, leaf in zip(bucket.leaf_ids, vals):
+                    new_leaves[lid] = leaf
+        out = jax.tree_util.tree_unflatten(p.buckets.treedef, new_leaves)
+        return out, (tuple(new_residuals) if p.use_ef else residuals), token
+
+    def gate_token(self, grads):
+        """A scalar data-dependent on EVERY collective of the exchange.
+
+        The trainer's blocking schedule gates the next microbatch's inputs
+        on this, so compute cannot start before the whole exchange retires
+        even when prioritization (and with it the engine's own token
+        threading) is off. A fused bucket is one collective (its first leaf
+        covers it); a non-fusable bucket reduces per leaf, so every leaf
+        contributes. Returns a zero scalar for an empty plan."""
+        leaves = jax.tree_util.tree_leaves(grads)
+        toks = []
+        for bi, b in enumerate(self.plan.buckets.buckets):
+            ids = b.leaf_ids[:1] if self.plan.fusable[bi] else b.leaf_ids
+            toks.extend(leaves[i].reshape(-1)[0] for i in ids)
+        if not toks:
+            return jnp.zeros((), jnp.float32)
+        out = toks[0]
+        for t in toks[1:]:
+            out = out + t
+        return out
+
+    def reduce(self, grads, residuals):
+        """The whole exchange as one call (fresh priority chain).
+
+        Returns (reduced_tree, new_residuals)."""
+        out, residuals, _ = self.reduce_chained(grads, residuals, None)
+        return out, residuals

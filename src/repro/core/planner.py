@@ -243,6 +243,44 @@ ALGO_FLAT = "flat"
 ALGO_HIER = "hier"
 
 
+def bucket_allreduce_times(buckets, algos, nodes: int, topo: hw.Topology, *,
+                           bytes_per_elem: float = 4.0) -> tuple:
+    """Per-bucket allreduce service time under each bucket's routed
+    algorithm (ALGO_FLAT rings over all ranks, ALGO_HIER two-level).
+
+    `buckets` is a scheduler.BucketPlan's bucket tuple (anything with
+    ``n_elems``); `algos` the matching route tuple (e.g. an
+    engine.EnginePlan's ``algos``)."""
+    out = []
+    for b, algo in zip(buckets, algos):
+        nbytes = b.n_elems * bytes_per_elem
+        t = (hw.hier_allreduce_time(nbytes, nodes, topo)
+             if algo == ALGO_HIER else
+             hw.flat_allreduce_time(nbytes, nodes, topo))
+        out.append(t)
+    return tuple(out)
+
+
+def estimate_overlap(buckets, algos, nodes: int, topo: hw.Topology,
+                     n_micro: int, micro_compute: float, *,
+                     bytes_per_elem: float = 4.0):
+    """Overlap-aware schedule estimate for an engine bucket plan.
+
+    Returns (blocking_stats, overlap_stats) — simulator.BucketScheduleStats
+    for the engine's per-microbatch exchange with and without pipelining,
+    using the per-level cost model for each bucket's service time. This is
+    the modeled side of bench_overlap's modeled-vs-measured comparison.
+    """
+    from repro.core import simulator as sim
+    times = bucket_allreduce_times(buckets, algos, nodes, topo,
+                                   bytes_per_elem=bytes_per_elem)
+    off = sim.simulate_bucket_schedule(times, n_micro, micro_compute,
+                                       overlap=False)
+    on = sim.simulate_bucket_schedule(times, n_micro, micro_compute,
+                                      overlap=True)
+    return off, on
+
+
 def choose_allreduce_algo(nbytes: float, nodes: int,
                           topo: hw.Topology) -> str:
     """Pick flat vs two-level allreduce for one message from the per-level

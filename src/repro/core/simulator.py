@@ -250,6 +250,56 @@ def exposed_comm_reduction(layers: Sequence[SimLayer], p: int,
     return fifo.exposed_comm / prio.exposed_comm
 
 
+# --------------------------------------------------------------------------
+# Overlap-aware bucket schedule (the CommEngine's microbatch pipeline)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketScheduleStats:
+    """One training step of the engine's per-microbatch exchange."""
+
+    overlap: bool
+    n_micro: int
+    total_time: float
+    compute_time: float          # n_micro * per-microbatch fwd+bwd
+    exposed_comm: float          # total - compute
+    comm_busy: float             # n_micro * sum(bucket service times)
+
+
+def simulate_bucket_schedule(bucket_times: Sequence[float], n_micro: int,
+                             micro_compute: float, *,
+                             overlap: bool) -> BucketScheduleStats:
+    """Estimate one step of the CommEngine's accumulation-scan exchange.
+
+    Mirrors train.trainer exactly: every microbatch's buckets are reduced
+    (service times `bucket_times`, one entry per bucket of the EnginePlan);
+    with ``overlap=False`` microbatch k+1's compute waits for microbatch k's
+    reduction chain (blocking), with ``overlap=True`` the chain is serviced
+    by the network (single resource, in priority order) while the next
+    microbatches compute, and only the drain past the last microbatch's
+    compute is exposed — the modeled counterpart of what
+    benchmarks/bench_overlap.py measures on the virtual-device mesh.
+
+    With ``n_micro == 1`` both schedules degrade to reduce-at-end and the
+    full chain is exposed, matching the trainer's fallback.
+    """
+    comm_per_micro = float(sum(bucket_times))
+    compute = n_micro * micro_compute
+    if not overlap or n_micro == 1:
+        total = compute + n_micro * comm_per_micro
+    else:
+        t_link = 0.0
+        for k in range(n_micro):
+            ready = (k + 1) * micro_compute    # bwd of microbatch k done
+            for t in bucket_times:
+                t_link = max(t_link, ready) + t
+        total = max(compute, t_link)
+    return BucketScheduleStats(overlap=overlap, n_micro=n_micro,
+                               total_time=total, compute_time=compute,
+                               exposed_comm=total - compute,
+                               comm_busy=n_micro * comm_per_micro)
+
+
 def layers_from_specs(specs, batch_per_node: int, chip: hw.Chip,
                       bytes_per_elem: float = 4.0) -> list:
     """Turn c2c.LayerSpec shapes into SimLayers using a chip compute model."""

@@ -400,6 +400,8 @@ def main():
     ap.add_argument("--wire", default="fp32", choices=["fp32", "bf16", "int8"])
     ap.add_argument("--moe-impl", default="gather", choices=["gather", "ep"])
     ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipeline microbatch reduction (mlsl, --accum > 1)")
     ap.add_argument("--wgather-wire", default="bf16",
                     choices=["bf16", "int8"])
     ap.add_argument("--kv-dtype", default="native",
@@ -416,7 +418,7 @@ def main():
     comm = tr.CommConfig(mode=args.comm, wire=args.wire,
                          prioritize=not args.no_prioritize,
                          moe_impl=args.moe_impl, accum_steps=args.accum,
-                         kv_chunk=args.kv_chunk,
+                         overlap=args.overlap, kv_chunk=args.kv_chunk,
                          wgather_wire=args.wgather_wire,
                          kv_dtype=args.kv_dtype)
     combos = []
@@ -442,8 +444,8 @@ def main():
                 or comm.wire != "fp32" or comm.accum_steps != 1 \
                 or comm.kv_chunk or args.parallelism != "hybrid":
             tag += (f"__{comm.mode}-{comm.wire}-{comm.moe_impl}"
-                    f"-a{comm.accum_steps}-kc{comm.kv_chunk}"
-                    f"-{args.parallelism}")
+                    f"-a{comm.accum_steps}{'-ov' if comm.overlap else ''}"
+                    f"-kc{comm.kv_chunk}-{args.parallelism}")
         path = os.path.join(args.out, tag + ".json")
         if args.skip_existing and os.path.exists(path):
             print(f"[skip-existing] {tag}")

@@ -57,6 +57,12 @@ def main():
     # name a machine hierarchy (repro.core.hw.TOPOLOGIES) to let the
     # per-level cost model route each bucket flat vs two-level
     ap.add_argument("--topo", default=None)
+    # MLSL-style compute/communication overlap: with --microbatches N > 1
+    # the engine reduces microbatch k's buckets interleaved with microbatch
+    # k+1's forward/backward (requires --comm mlsl)
+    ap.add_argument("--overlap", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation microbatches per step")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -78,7 +84,8 @@ def main():
                          prioritize=not args.no_prioritize,
                          error_feedback=args.error_feedback,
                          hier=args.hier, wire_intra=args.wire_intra,
-                         topo=args.topo)
+                         topo=args.topo, accum_steps=args.microbatches,
+                         overlap=args.overlap)
     dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                global_batch=args.batch, seed=args.seed)
 

@@ -9,10 +9,19 @@ Two first-class communication modes (DESIGN.md §4):
   * ``mlsl``   -- the paper's data path: the whole step runs inside a
     shard_map that is MANUAL over the batch ("pod"/"data") axes and AUTO over
     the model axis. Per-device gradients are fused into priority buckets and
-    reduced explicitly through repro.core.collectives with a selectable wire
-    precision (fp32 / bf16 / int8 with optional error feedback). First-layer
-    buckets are chained ahead of bulk buckets, reproducing MLSL's message
-    prioritization in the compiled HLO.
+    reduced explicitly through the CommEngine (repro.core.engine), which owns
+    bucket planning, flat-vs-two-level routing, wire precision (fp32 / bf16 /
+    int8 with optional error feedback) and the priority chain.
+
+Gradient accumulation (``accum_steps > 1``) in mlsl mode reduces each
+microbatch's buckets as they are produced (DDP-style) and accumulates the
+*reduced* gradients; ``overlap=True`` software-pipelines that exchange so
+microbatch k's buckets reduce interleaved with microbatch k+1's
+forward/backward — the XLA-static analogue of MLSL's endpoint servers
+progressing communication under compute. The two schedules compute
+bit-identical fp32 values (same operations, different barrier structure).
+With ``accum_steps == 1`` the step reduces once after the backward
+(reduce-at-end), regardless of ``overlap``.
 
 The returned step function is `jax.jit`-compatible with sharded TrainState /
 Batch and is what launch/train.py, the dry-run, and the tests all use.
@@ -21,44 +30,21 @@ Batch and is what launch/train.py, the dry-run, and the tests all use.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.core import collectives, hw, scheduler
-from repro.core import hier as hier_lib
-from repro.core import planner as planner_lib
+from repro.core import scheduler
+from repro.core.engine import CommConfig, CommEngine
 from repro.core.planner import Planner
 from repro.models.transformer import Batch, Model
 from repro.optim import optimizers as opt_lib
 
-
-@dataclasses.dataclass(frozen=True)
-class CommConfig:
-    mode: str = "gspmd"              # gspmd | mlsl
-    wire: str = collectives.WIRE_FP32
-    prioritize: bool = True
-    bucket_bytes: float = 25e6
-    error_feedback: bool = False     # int8 wire only
-    moe_impl: str = "gather"         # gather | ep  (expert-parallel a2a)
-    accum_steps: int = 1             # microbatch gradient accumulation
-    kv_chunk: int = 0                # >0: online-softmax attention chunking
-    wgather_wire: str = "bf16"       # int8: quantized ZeRO weight gathers (ep)
-    kv_dtype: str = "native"         # int8: quantized GQA KV cache (serving)
-    # two-level collectives over a ("node", "local") factored data dimension
-    # (repro.core.hier): `wire` selects the inter-node fabric leg and
-    # `wire_intra` the intra-node legs (None: hier.default_wire_intra).
-    # `topo` optionally names a machine hierarchy (repro.core.hw.TOPOLOGIES);
-    # when set, each fused bucket is routed flat vs two-level by the
-    # per-level cost model (scheduler.route_buckets) instead of always
-    # taking the hierarchical path.
-    hier: bool = False
-    wire_intra: Optional[str] = None
-    topo: Optional[str] = None
+__all__ = ["CommConfig", "TrainState", "make_train_state", "make_comm_engine",
+           "make_train_step", "state_shardings"]
 
 
 @dataclasses.dataclass
@@ -109,13 +95,52 @@ def state_shardings(planner: Planner, model: Model,
                       step=P(), comm_residuals=None)
 
 
+def _grad_struct(model: Model):
+    """Abstract f32 gradient tree matching the parameter structure."""
+    return jax.eval_shape(
+        lambda: jax.tree_util.tree_map(
+            lambda pd: jnp.zeros(pd.shape, jnp.float32),
+            model.param_defs(), is_leaf=_is_pd))
+
+
+def make_comm_engine(model: Model, mesh: Mesh, planner: Planner,
+                     comm: CommConfig) -> CommEngine:
+    """The model's CommEngine: bucket plan + routing from its parameter
+    structure and sharding groups (the glue the Session facade and the
+    benchmarks also use)."""
+    grad_struct = _grad_struct(model)
+    # fuse only within same-sharding groups: flattening a tensor that is
+    # sharded over the (auto) model axis would reshard it
+    pspecs = planner.tree_specs(model.param_defs(),
+                                stacked_paths=Model.stacked_path)
+    spec_by_path = {jax.tree_util.keystr(path): spec for path, spec in
+                    jax.tree_util.tree_leaves_with_path(
+                        pspecs, is_leaf=lambda x: isinstance(x, P))}
+
+    def group_key(path):
+        return str(spec_by_path.get(jax.tree_util.keystr(path), P()))
+
+    def leaf_replicated(path):
+        spec = spec_by_path.get(jax.tree_util.keystr(path), P())
+        return all(a is None for a in spec)
+
+    return CommEngine.create(grad_struct, comm, mesh, planner.batch_axes,
+                             layer_index=_layer_index_fn(),
+                             group_key=group_key,
+                             leaf_replicated=leaf_replicated)
+
+
 def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
                     planner: Planner, comm: CommConfig,
                     *, grad_clip: float = 1.0):
-    """Returns (train_step(state, batch) -> (state, metrics), specs dict)."""
+    """Returns train_step(state, batch) -> (state, metrics)."""
     cfg = model.cfg
     data_axes = planner.batch_axes
     fsdp_axes = planner.batch_axes if planner.fsdp else ()
+    if comm.overlap and comm.mode != "mlsl":
+        raise ValueError("CommConfig(overlap=True) needs the explicit mlsl "
+                         "data path; gspmd reductions are partitioner-"
+                         "inserted and cannot be pipelined from here")
 
     # mlsl mode runs the step in a shard_map manual over the batch axes; if
     # any OTHER mesh axis is >1 the region is PARTIAL-manual, which on JAX
@@ -139,18 +164,21 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
     def loss_fn(params, batch: Batch):
         return model.loss(params, batch, **loss_kw)
 
-    def grads_fn(params, batch: Batch):
-        """(loss, grads), microbatched over comm.accum_steps (C3: large
-        global batches at bounded activation memory)."""
-        if comm.accum_steps <= 1:
-            return jax.value_and_grad(loss_fn)(params, batch)
-        acc = comm.accum_steps
-
+    def _split_micro(batch, acc):
         def split(x):
             assert x.shape[0] % acc == 0, (x.shape, acc)
             return x.reshape(acc, x.shape[0] // acc, *x.shape[1:])
+        return jax.tree_util.tree_map(split, batch)
 
-        micro = jax.tree_util.tree_map(split, batch)
+    def grads_fn(params, batch: Batch):
+        """(loss, grads), microbatched over comm.accum_steps (C3: large
+        global batches at bounded activation memory). Gradients here are
+        UNREDUCED (local); used by gspmd (partitioner reduces) and by the
+        mlsl accum_steps == 1 path (engine reduces at end)."""
+        if comm.accum_steps <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        acc = comm.accum_steps
+        micro = _split_micro(batch, acc)
         gz = jax.tree_util.tree_map(
             lambda x: jnp.zeros(x.shape, jnp.float32), params)
 
@@ -194,146 +222,93 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
                               "parameters over the batch axes; use gspmd for "
                               "ZeRO-sharded giants")
 
-    # Bucket plan is built from the (static) parameter structure.
-    grad_struct = jax.eval_shape(
-        lambda: jax.tree_util.tree_map(lambda pd: jnp.zeros(pd.shape,
-                                                            jnp.float32),
-                                       model.param_defs(),
-                                       is_leaf=_is_pd))
-    # fuse only within same-sharding groups: flattening a tensor that is
-    # sharded over the (auto) model axis would reshard it
-    pspecs = planner.tree_specs(model.param_defs(),
-                                stacked_paths=Model.stacked_path)
-    spec_by_path = {jax.tree_util.keystr(path): spec for path, spec in
-                    jax.tree_util.tree_leaves_with_path(
-                        pspecs, is_leaf=lambda x: isinstance(x, P))}
+    # The engine owns the whole bucket-reduction data path: planning,
+    # flat-vs-two-level routing, wire precision, error feedback, priority
+    # chain.
+    engine = make_comm_engine(model, mesh, planner, comm)
 
-    def group_key(path):
-        return str(spec_by_path.get(jax.tree_util.keystr(path), P()))
+    def _to_f32(tree):
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), tree)
 
-    def leaf_replicated(path):
-        spec = spec_by_path.get(jax.tree_util.keystr(path), P())
-        return all(a is None for a in spec)
+    def accum_reduce(params, batch: Batch, residuals):
+        """Per-microbatch exchange over the accumulation scan.
 
-    plan = scheduler.plan_buckets(grad_struct, _layer_index_fn(),
-                                  bucket_bytes=comm.bucket_bytes,
-                                  group_key=group_key)
-    # which buckets may be fused into a flat message: only fully-replicated
-    # leaves -- flattening a model-sharded gradient under the auto axis
-    # reshards it (all-gathers over the node group; §Perf iteration A0/C2)
-    leaf_paths = [path for path, _ in
-                  jax.tree_util.tree_leaves_with_path(grad_struct)]
-    bucket_fusable = tuple(
-        all(leaf_replicated(leaf_paths[i]) for i in b.leaf_ids)
-        for b in plan.buckets)
-    dp = 1
-    for a in data_axes:
-        dp *= mesh.shape[a]
+        Each microbatch's gradients are reduced (mean over ranks) and the
+        REDUCED gradients accumulated. overlap=False is the blocking
+        baseline: the barrier token gates microbatch k+1's inputs on
+        microbatch k's reduction chain retiring. overlap=True software-
+        pipelines: microbatch k's reduction is issued with no data
+        dependence on microbatch k+1's compute (only the collective chain
+        itself is token-ordered), so the compiler may overlap the two —
+        MLSL's EP servers, expressed statically. Both schedules perform the
+        identical fp32 operation sequence, so they are bit-identical.
+        """
+        acc = comm.accum_steps
+        micro = _split_micro(batch, acc)
+        gz = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        add = lambda a, b: a + b  # noqa: E731
+        token0 = jnp.zeros((), jnp.float32)
 
-    use_ef = comm.error_feedback and comm.wire == collectives.WIRE_INT8
+        # Microbatch 0 is peeled out of the scan in BOTH schedules so the
+        # loss_fn call sites match exactly (prologue + scan-of-rest): XLA
+        # fuses a top-level instance and an in-scan-body instance of the
+        # same function differently, and matched call sites are what makes
+        # the two schedules bit-identical, not just close.
+        mb0 = jax.tree_util.tree_map(lambda x: x[0], micro)
+        rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
+        loss0, g0 = jax.value_and_grad(loss_fn)(params, mb0)
 
-    use_hier = comm.hier
-    if use_hier:
-        assert hier_lib.NODE_AXIS in data_axes and \
-            hier_lib.LOCAL_AXIS in data_axes, (
-                "comm.hier needs the data dimension factored over "
-                f"({hier_lib.NODE_AXIS!r}, {hier_lib.LOCAL_AXIS!r}) mesh "
-                f"axes (launch.mesh.make_hier_mesh); got {data_axes}")
-        wire_intra = comm.wire_intra or hier_lib.default_wire_intra(comm.wire)
-        hier_spec = hier_lib.HierSpec(
-            wire_intra=wire_intra, wire_inter=comm.wire,
-            error_feedback=use_ef)
-        n_node = mesh.shape[hier_lib.NODE_AXIS]
-        n_local = mesh.shape[hier_lib.LOCAL_AXIS]
-        if comm.topo is not None:
-            if comm.topo not in hw.TOPOLOGIES:
-                raise ValueError(
-                    f"unknown topology {comm.topo!r}; known: "
-                    f"{sorted(hw.TOPOLOGIES)}")
-            # per-bucket flat-vs-two-level routing from the per-level cost
-            # model: small latency-bound buckets may stay flat while bulk
-            # buckets take the hierarchy (MLSL per-message phase choice)
-            bucket_algos = scheduler.route_buckets(
-                plan, hw.TOPOLOGIES[comm.topo], nodes=n_node)
+        if not comm.overlap:
+            # blocking baseline: reduce each microbatch's buckets before the
+            # next microbatch's compute. Without prioritization the engine
+            # does not thread its own token, so the gate is derived from
+            # every bucket's output instead — blocking must not silently
+            # weaken under prioritize=False.
+            def exchange(g, res, token):
+                red, res, token = engine.reduce_chained(_to_f32(g), res,
+                                                        token)
+                if not comm.prioritize:
+                    token = engine.gate_token(red)
+                return red, res, token
+
+            red0, residuals, token = exchange(g0, residuals, token0)
+            gsum = jax.tree_util.tree_map(add, gz, red0)
+
+            def body(carry, mb):
+                gsum, lsum, res, token = carry
+                mb, token = scheduler.chain_barrier(mb, token)
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                red, res, token = exchange(g, res, token)
+                gsum = jax.tree_util.tree_map(add, gsum, red)
+                return (gsum, lsum + loss, res, token), None
+
+            (gsum, lsum, residuals, _), _ = compat.maybe_scan(
+                body, (gsum, loss0, residuals, token), rest,
+                unroll=unroll_scans)
         else:
-            bucket_algos = tuple(planner_lib.ALGO_HIER
-                                 for _ in plan.buckets)
-    else:
-        bucket_algos = tuple(planner_lib.ALGO_FLAT for _ in plan.buckets)
+            # software pipeline: iteration k reduces microbatch k-1's
+            # buckets beside microbatch k's compute (the reduction chain is
+            # token-ordered but carries no dependence on the compute); the
+            # epilogue drains the last microbatch
+            def body(carry, mb):
+                gsum, lsum, pending, res, token = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                red, res, token = engine.reduce_chained(pending, res, token)
+                gsum = jax.tree_util.tree_map(add, gsum, red)
+                return (gsum, lsum + loss, _to_f32(g), res, token), None
 
-    def _bucket_hier(bi: int) -> bool:
-        return bucket_algos[bi] == planner_lib.ALGO_HIER
+            (gsum, lsum, pending, residuals, token), _ = compat.maybe_scan(
+                body, (gz, loss0, _to_f32(g0), residuals, token0), rest,
+                unroll=unroll_scans)
+            red, residuals, _ = engine.reduce_chained(pending, residuals,
+                                                      token)
+            gsum = jax.tree_util.tree_map(add, gsum, red)
 
-    def init_residuals():
-        """Global-view zero residuals: per-rank shard shape x dp ranks (the
-        shard_map in_spec splits them back to one fabric shard per rank)."""
-        if not use_ef:
-            return None
-
-        def shard(bi, b):
-            if _bucket_hier(bi):
-                return hier_lib.ef_residual_shape(b.n_elems, n_local,
-                                                  n_node)[0]
-            return collectives.ef_residual_shape(b.n_elems, dp)[0]
-
-        return tuple(jnp.zeros((shard(bi, b) * dp,), jnp.float32)
-                     for bi, b in enumerate(plan.buckets))
-
-    def _reduce_flat(flat, residual, bi):
-        """One fused message over the data axes: flat or two-level path per
-        the bucket routing. Returns (reduced, new_residual_or_None)."""
-        if _bucket_hier(bi):
-            if use_ef:
-                return hier_lib.hier_allreduce_ef(flat, residual, hier_spec,
-                                                  mean=True)
-            return hier_lib.hier_allreduce(flat, hier_spec, mean=True), None
-        if use_ef:
-            return collectives.allreduce_ef(flat, residual, data_axes,
-                                            mean=True)
-        return collectives.allreduce(flat, data_axes, wire=comm.wire,
-                                     mean=True), None
-
-    def _reduce_buckets(grads, residuals):
-        """Fused, prioritized, wire-precision gradient exchange.
-
-        Replicated buckets travel as one fused flat message (MLSL message
-        fusion + optional int8 block quantization and error feedback).
-        Model-sharded buckets are reduced per-leaf, shape-preserving (no
-        resharding); the int8 wire's flatten/scatter composition would
-        reshard them, so those leaves use the bf16 wire instead."""
-        leaves = jax.tree_util.tree_leaves(grads)
-        new_leaves = list(leaves)
-        new_residuals = []
-        token = None
-        for bi, bucket in enumerate(plan.buckets):
-            if bucket_fusable[bi]:
-                flat = scheduler.fuse_bucket(leaves, bucket)
-                if comm.prioritize:
-                    flat, token = scheduler.chain_barrier(flat, token)
-                red, res = _reduce_flat(flat,
-                                        residuals[bi] if use_ef else None,
-                                        bi)
-                if use_ef:
-                    new_residuals.append(res)
-                if comm.prioritize:
-                    token = scheduler._token_of(red)
-                for lid, leaf in scheduler.unfuse_bucket(red, bucket).items():
-                    new_leaves[lid] = leaf
-            else:
-                vals = [leaves[i] for i in bucket.leaf_ids]
-                if comm.prioritize:
-                    vals, token = scheduler.chain_barrier(vals, token)
-                wire = comm.wire if comm.wire != collectives.WIRE_INT8                     else collectives.WIRE_BF16
-                vals = [collectives.allreduce(v, data_axes, wire=wire,
-                                              mean=True) for v in vals]
-                if use_ef:
-                    new_residuals.append(residuals[bi])
-                if comm.prioritize:
-                    token = scheduler._token_of(vals[0])
-                for lid, leaf in zip(bucket.leaf_ids, vals):
-                    new_leaves[lid] = leaf
-        out = jax.tree_util.tree_unflatten(plan.treedef, new_leaves)
-        return out, (tuple(new_residuals) if use_ef else None)
+        grads = jax.tree_util.tree_map(
+            lambda g, pp: (g / acc).astype(pp.dtype), gsum, params)
+        return lsum / acc, grads, residuals
 
     # shard_map specs: manual over batch axes only; model axis stays auto.
     bspec = data_axes if len(data_axes) > 1 else data_axes[0]
@@ -341,28 +316,32 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
 
     def inner(params, opt_state, step, residuals, batch: Batch):
         # per-device local loss; gradient = d(local mean)/d(params)
-        loss, grads = grads_fn(params, batch)
-        grads, residuals = _reduce_buckets(grads, residuals)
+        if comm.accum_steps > 1:
+            loss, grads, residuals = accum_reduce(params, batch, residuals)
+        else:
+            loss, grads = grads_fn(params, batch)
+            grads, residuals = engine.reduce(grads, residuals)
         grads, gnorm = opt_lib.clip_by_global_norm(grads, grad_clip)
         loss = jax.lax.pmean(loss, data_axes)
         params, opt_state = optimizer.update(grads, opt_state, params, step)
         return params, opt_state, residuals, loss, gnorm
 
-    params_specs = jax.tree_util.tree_map(lambda _: replicated,
-                                          grad_struct)
+    grad_treedef = engine.plan.buckets.treedef
+    params_specs = jax.tree_util.tree_unflatten(
+        grad_treedef, [replicated] * grad_treedef.num_leaves)
     batch_in_specs = Batch(tokens=P(bspec), labels=P(bspec), mask=None,
                            img_embeds=P(bspec) if cfg.vlm_img_tokens else None,
                            frame_embeds=P(bspec) if cfg.encoder is not None
                            else None)
-    res_spec = (tuple(P(bspec) for _ in plan.buckets) if use_ef else None)
+    res_spec = engine.residual_specs(P(bspec))
 
     def train_step(state: TrainState, batch: Batch):
         opt_specs = jax.tree_util.tree_map(lambda _: replicated,
                                            state.opt_state,
                                            is_leaf=lambda x: x is None)
         residuals = state.comm_residuals
-        if use_ef and residuals is None:
-            residuals = init_residuals()
+        if engine.plan.use_ef and residuals is None:
+            residuals = engine.init_residuals()
 
         out = compat.shard_map(
             inner, mesh=mesh,

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import scheduler
+from repro.core import hw, planner, scheduler
 
 
 def _tree():
@@ -64,6 +64,57 @@ def test_reduce_with_priority_preserves_values():
         lambda a, b: np.testing.assert_allclose(np.asarray(a) * 2.0,
                                                 np.asarray(b), rtol=1e-6),
         t, out)
+
+
+def test_route_buckets_single_leaf_buckets():
+    """bucket_bytes=1.0 degenerates to one leaf per bucket; every bucket
+    still gets a route and tiny leaves stay on the flat ring."""
+    t = _tree()
+    plan = scheduler.plan_buckets(t, bucket_bytes=1.0)
+    n_leaves = len(jax.tree_util.tree_leaves(t))
+    assert len(plan.buckets) == n_leaves
+    assert all(len(b.leaf_ids) == 1 for b in plan.buckets)
+    routes = scheduler.route_buckets(plan, hw.CLOUD_10G, nodes=16)
+    assert len(routes) == n_leaves
+    assert all(r in (planner.ALGO_FLAT, planner.ALGO_HIER) for r in routes)
+    # a degenerate hierarchy routes every single-leaf bucket flat
+    assert scheduler.route_buckets(plan, hw.CLOUD_10G, nodes=1) \
+        == tuple(planner.ALGO_FLAT for _ in plan.buckets)
+
+
+def test_plan_buckets_group_key_never_fuses_across_groups():
+    """A sharding boundary must split buckets even under a huge byte cap
+    (the all-model-sharded case: every leaf its own group, zero fusion)."""
+    t = {"layers": [{"w": jnp.ones((64, 64)), "b": jnp.ones((64,))}
+                    for _ in range(3)]}
+    leaves_with_paths = jax.tree_util.tree_leaves_with_path(t)
+
+    def per_leaf_group(path):
+        return jax.tree_util.keystr(path)       # all distinct: no fusion
+
+    plan = scheduler.plan_buckets(t, group_key=per_leaf_group,
+                                  bucket_bytes=1e12)
+    assert len(plan.buckets) == len(leaves_with_paths)
+    # and a two-group key fuses within but not across groups
+    def parity_group(path):
+        return jax.tree_util.keystr(path).endswith("'w']")
+
+    plan2 = scheduler.plan_buckets(t, group_key=parity_group,
+                                   bucket_bytes=1e12)
+    for b in plan2.buckets:
+        keys = {parity_group(leaves_with_paths[i][0]) for i in b.leaf_ids}
+        assert len(keys) == 1, b
+
+
+def test_plan_buckets_empty_tree():
+    """An empty gradient tree plans to zero buckets and reduces to itself."""
+    for empty in ({}, {"a": {}, "b": []}):
+        plan = scheduler.plan_buckets(empty, scheduler.default_layer_index,
+                                      bucket_bytes=1 << 20)
+        assert plan.buckets == ()
+        assert scheduler.route_buckets(plan, hw.CLOUD_10G, nodes=4) == ()
+        out = scheduler.reduce_with_priority(empty, lambda x, b: x, plan)
+        assert jax.tree_util.tree_leaves(out) == []
 
 
 def test_priority_chain_in_hlo():
