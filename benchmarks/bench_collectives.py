@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from benchmarks import common
 from benchmarks.common import emit, time_fn
 from repro import compat
 from repro.core import collectives, hier, hw, planner
@@ -120,9 +121,11 @@ def run_hier():
 
 def main():
     if "--hier" in sys.argv:
-        run_hier()
+        # distinct artifact: the 8-virtual-device sweep measures a different
+        # thing than the single-device run() and must not clobber its ledger
+        common.run_with_ledger("bench_collectives_hier", run_hier)
     else:
-        run()
+        common.run_with_ledger("bench_collectives", run)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ explained hypothesis -- see EXPERIMENTS.md.
 
 from __future__ import annotations
 
+from benchmarks import common
 from benchmarks.common import emit, fmt_exposed, reduction_ratio, time_fn
 from repro.configs import cnn_tables
 from repro.core import hw, simulator as sim
@@ -70,7 +71,7 @@ def run():
 
 
 def main():
-    run()
+    common.run_with_ledger("bench_prioritization", run)
 
 
 if __name__ == "__main__":

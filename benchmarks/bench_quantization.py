@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, time_fn
 from repro.core import collectives, hw
 from repro.kernels import ops as kops
@@ -68,7 +69,7 @@ def run():
 
 
 def main():
-    run()
+    common.run_with_ledger("bench_quantization", run)
 
 
 if __name__ == "__main__":

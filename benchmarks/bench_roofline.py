@@ -8,6 +8,7 @@ import glob
 import json
 import os
 
+from benchmarks import common
 from benchmarks.common import emit
 
 ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
@@ -41,7 +42,7 @@ def run():
 
 
 def main():
-    run()
+    common.run_with_ledger("bench_roofline", run)
 
 
 if __name__ == "__main__":

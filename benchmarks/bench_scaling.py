@@ -23,14 +23,29 @@ from __future__ import annotations
 
 import dataclasses
 
+from benchmarks import common
 from benchmarks.common import emit, time_fn
 from repro.configs import cnn_tables
-from repro.core import hw, simulator as sim
+from repro.core import hw, planner, simulator as sim
 
 GLOBAL_BATCH = 8192
 OPA_EFFECTIVE = dataclasses.replace(hw.OMNIPATH, bw=4e9)
 MLSL_EFF = 0.7
 HOROVOD_MPI_EFF = 0.45
+
+# -- degradation scenarios (Keuper & Pfreundt 1609.06870: scaling limits
+# appear where links degrade and stragglers emerge) -------------------------
+FAULTS = (
+    ("degraded_inter", sim.FaultSpec(inter_bw_factor=0.4)),
+    ("congested_intra", sim.FaultSpec(intra_bw_factor=0.25)),
+    ("straggler_1p5x", sim.FaultSpec(straggler_slowdown=1.5)),
+    ("hetero_links", sim.FaultSpec(hetero_link_bw_factors=(1.0, 0.6, 0.9))),
+)
+# inter-fabric degradation used for the routing-crossover scenario
+ROUTING_FAULT = sim.FaultSpec(inter_bw_factor=0.4)
+ROUTING_TOPO = hw.CLOUD_VIRT        # the one hierarchy where flat can win
+ROUTING_NODES = 16
+BUCKET_SWEEP_MB = (0.25, 1.0, 4.0, 16.0, 25.0, 64.0)
 
 
 def run():
@@ -66,11 +81,60 @@ def run():
     emit("scaling/summary/tf_horovod", 0.0,
          f"mlsl_eff_n64={hi64:.3f};paper_claim>0.93;"
          f"consistent={hi64 > 0.93};horovod_mpi_n64={hvd64:.3f}")
+    run_faults()
     return out
 
 
+def _crossover_mb(topo, fault=None):
+    """Smallest swept bucket size routed FLAT (hier wins below it on
+    CLOUD_VIRT-shaped hierarchies); inf when the hierarchy wins everywhere."""
+    for mb in BUCKET_SWEEP_MB:
+        algo = planner.choose_allreduce_algo(mb * 1e6, ROUTING_NODES, topo,
+                                             fault=fault)
+        if algo == planner.ALGO_FLAT:
+            return mb
+    return float("inf")
+
+
+def run_faults():
+    """Fig. 2 off the happy path: scaling efficiency under injected
+    degradation, and the flat/hier routing crossover shifting when the
+    inter-node fabric degrades (the Cloud-vs-HPC story made testable)."""
+    specs = cnn_tables.resnet50_layers()
+    for p in (64, 256):
+        bs = GLOBAL_BATCH // p
+        layers = sim.layers_from_specs(specs, bs, hw.XEON_6148)
+        eff0 = sim.scaling_efficiency(layers, p, OPA_EFFECTIVE,
+                                      overlap_eff=MLSL_EFF)
+        for name, fault in FAULTS:
+            eff = sim.scaling_efficiency(layers, p, OPA_EFFECTIVE,
+                                         overlap_eff=MLSL_EFF, fault=fault)
+            emit(f"faults/scaling/resnet50/{name}/n{p}", 0.0,
+                 f"eff_healthy={eff0:.3f};eff_fault={eff:.3f};"
+                 f"monotone={eff <= eff0 + 1e-9}")
+
+    # routing under degradation: per-bucket flat-vs-hier choice across
+    # message sizes, healthy vs degraded inter fabric
+    for mb in BUCKET_SWEEP_MB:
+        nbytes = mb * 1e6
+        healthy = planner.choose_allreduce_algo(nbytes, ROUTING_NODES,
+                                                ROUTING_TOPO)
+        degraded = planner.choose_allreduce_algo(nbytes, ROUTING_NODES,
+                                                 ROUTING_TOPO,
+                                                 fault=ROUTING_FAULT)
+        emit(f"faults/routing/{ROUTING_TOPO.name}/mb{mb:g}", 0.0,
+             f"algo_healthy={healthy};algo_degraded={degraded};"
+             f"changed={healthy != degraded}")
+    x0 = _crossover_mb(ROUTING_TOPO)
+    x1 = _crossover_mb(ROUTING_TOPO, fault=ROUTING_FAULT)
+    emit(f"faults/routing/{ROUTING_TOPO.name}/crossover", 0.0,
+         f"flat_wins_above_healthy_mb={x0:g};"
+         f"flat_wins_above_degraded_mb={x1:g};"
+         f"routing_changed={x0 != x1}")
+
+
 def main():
-    run()
+    common.run_with_ledger("bench_scaling", run)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,289 @@
-"""Shared benchmark plumbing: CSV emission, timing, exposed-comm metrics."""
+"""Shared benchmark plumbing: CSV emission, timing, exposed-comm metrics,
+and the perf-ledger schema.
+
+The perf ledger
+===============
+Every benchmark module writes a ``BENCH_<module>.json`` artifact (the CSV on
+stdout is unchanged) so benchmark numbers persist as a *trajectory* instead
+of dying in CI logs. One artifact = one `Ledger` record:
+
+.. code-block:: json
+
+    {
+      "schema_version": 1,
+      "module": "bench_scaling",
+      "created_unix": 1754550000.0,
+      "git_sha": "abc123...",            // null outside a git checkout
+      "device_count": 8,                 // null when jax was never imported
+      "jax_version": "0.4.30",
+      "python_version": "3.10.14",
+      "platform": "linux",
+      "metrics": [
+        {"name": "scaling/summary/fig2/eff_mlsl", "value": 0.93,
+         "unit": "", "better": "higher", "stable": true},
+        ...
+      ]
+    }
+
+Metric entries:
+  * ``name``   -- hierarchical, ``<emit name>/<derived key>``;
+  * ``value``  -- float, or a string for categorical facts (e.g. a routing
+    choice ``algo=hier``); string metrics are informational, never gated;
+  * ``unit``   -- "", "us", "ms", "s", "x", "B" ... parsed off the derived
+    value's suffix;
+  * ``better`` -- "lower" | "higher" | null. Null means informational.
+    ``scripts/perf_table.py --diff`` gates ONLY directional metrics;
+  * ``stable`` -- false for wall-clock measurements (and anything derived
+    from them), which jitter across hosts; the diff gate warns instead of
+    failing on unstable metrics unless given an explicit ``--time-tol``.
+
+How to add a metric: ``emit(name, us, "my_metric=1.23ms;...")`` inside a
+module's ``run()`` is enough — emit() parses every ``k=v`` pair of the
+derived column into the active ledger, classifying direction from the name/
+unit (`classify_metric`). Pass ``stable=False`` when the values derive from
+wall-clock measurement. For full control call ``current_ledger().record()``.
+
+Modules run under ``run_with_ledger`` (their ``main()``s and
+``benchmarks/run.py`` both do), which creates/writes the artifact around
+``run()``; the artifact directory is ``$BENCH_DIR`` or ``artifacts/bench``.
+"""
 
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
+import platform as _platform
+import re
+import subprocess
+import sys
 import time
 
+SCHEMA_VERSION = 1
+ARTIFACT_PREFIX = "BENCH_"
+DEFAULT_BENCH_DIR = "artifacts/bench"
 
-def emit(name: str, us_per_call: float, derived: str):
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Metric:
+    """One ledger entry. `value` is a float for quantitative metrics or a
+    string for categorical facts (never gated)."""
+
+    name: str
+    value: object
+    unit: str = ""
+    better: str | None = None        # "lower" | "higher" | None (info)
+    stable: bool = True
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "value": self.value, "unit": self.unit,
+                "better": self.better, "stable": self.stable}
+
+
+_LOWER_PAT = re.compile(
+    r"(^|[/_])(t_|time|exposed|latency|rmse|err|us_per_call|compile)"
+    r"|_ms$|_us$|_s$|_time$|_err(or)?$")
+_HIGHER_PAT = re.compile(
+    r"(^|[/_])(eff|efficiency|reduction|improvement|saving|throughput|"
+    r"tokens_per_sec|useful_ratio)")
+
+
+def classify_metric(name: str, unit: str = "") -> str | None:
+    """Default gate direction for a metric name: "lower" for time/error-like
+    metrics, "higher" for efficiency/reduction-like ones, None (ungated
+    informational) otherwise."""
+    low = name.lower()
+    if _HIGHER_PAT.search(low):
+        return "higher"
+    if _LOWER_PAT.search(low) or unit in ("us", "ms", "s"):
+        return "lower"
+    return None
+
+
+def validate_ledger(rec: dict) -> None:
+    """Raise ValueError if `rec` is not a schema-valid ledger record."""
+    if not isinstance(rec, dict):
+        raise ValueError("ledger record must be a JSON object")
+    for key, typ in (("schema_version", int), ("module", str),
+                     ("created_unix", (int, float)), ("metrics", list)):
+        if key not in rec:
+            raise ValueError(f"missing required key {key!r}")
+        if not isinstance(rec[key], typ):
+            raise ValueError(f"key {key!r} has type {type(rec[key]).__name__}")
+    if rec["schema_version"] > SCHEMA_VERSION:
+        raise ValueError(
+            f"schema_version {rec['schema_version']} is newer than "
+            f"supported {SCHEMA_VERSION}")
+    for m in rec["metrics"]:
+        if not isinstance(m, dict) or "name" not in m or "value" not in m:
+            raise ValueError(f"malformed metric entry: {m!r}")
+        if not isinstance(m["name"], str):
+            raise ValueError(f"metric name must be a string: {m!r}")
+        if not isinstance(m["value"], (int, float, str)):
+            raise ValueError(f"metric value must be number or string: {m!r}")
+        if m.get("better") not in ("lower", "higher", None):
+            raise ValueError(f"metric better must be lower|higher|null: {m!r}")
+
+
+def _git_sha() -> str | None:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else None
+    except Exception:                                     # noqa: BLE001
+        return None
+
+
+def _device_count() -> int | None:
+    # Never IMPORT jax just for metadata (that would initialize a platform
+    # in pure-simulator benchmarks); report only if it is already loaded.
+    jax = sys.modules.get("jax")
+    if jax is None:
+        return None
+    try:
+        return int(jax.device_count())
+    except Exception:                                     # noqa: BLE001
+        return None
+
+
+class Ledger:
+    """Collects one module's metrics and writes its BENCH_<module>.json."""
+
+    def __init__(self, module: str):
+        self.module = module
+        self.metrics: list = []
+        self.created_unix = time.time()
+
+    def record(self, name: str, value, unit: str = "",
+               better: str | None = None, stable: bool = True) -> None:
+        if better is None and not isinstance(value, str):
+            better = classify_metric(name, unit)
+        self.metrics.append(Metric(name=name, value=value, unit=unit,
+                                   better=better, stable=stable))
+
+    def to_record(self) -> dict:
+        jax = sys.modules.get("jax")
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "module": self.module,
+            "created_unix": self.created_unix,
+            "git_sha": _git_sha(),
+            "device_count": _device_count(),
+            "jax_version": getattr(jax, "__version__", None),
+            "python_version": _platform.python_version(),
+            "platform": sys.platform,
+            "metrics": [m.to_json() for m in self.metrics],
+        }
+
+    def write(self, out_dir: str | None = None) -> str:
+        out_dir = out_dir or os.environ.get("BENCH_DIR", DEFAULT_BENCH_DIR)
+        os.makedirs(out_dir, exist_ok=True)
+        rec = self.to_record()
+        validate_ledger(rec)
+        path = os.path.join(out_dir, f"{ARTIFACT_PREFIX}{self.module}.json")
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        return path
+
+
+# ---------------------------------------------------------------------------
+# active-ledger plumbing (emit() records into it transparently)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Ledger | None = None
+
+
+def start_ledger(module: str) -> Ledger:
+    global _ACTIVE
+    _ACTIVE = Ledger(module)
+    return _ACTIVE
+
+
+def current_ledger() -> Ledger | None:
+    return _ACTIVE
+
+
+def finish_ledger(out_dir: str | None = None) -> str | None:
+    """Write and deactivate the active ledger; returns the artifact path."""
+    global _ACTIVE
+    led, _ACTIVE = _ACTIVE, None
+    if led is None:
+        return None
+    return led.write(out_dir)
+
+
+def run_with_ledger(module: str, fn, *args, out_dir: str | None = None,
+                    **kw):
+    """Run one benchmark module's `run()` with a ledger active, writing the
+    BENCH_<module>.json artifact even if the run raises part-way (partial
+    trajectories beat absent ones)."""
+    start_ledger(module)
+    try:
+        return fn(*args, **kw)
+    finally:
+        path = finish_ledger(out_dir)
+        if path:
+            print(f"ledger: {path}", file=sys.stderr)
+
+
+_NUM_RE = re.compile(r"^[+-]?(\d+\.?\d*|\.\d+)([eE][+-]?\d+)?"
+                     r"(?P<unit>us|ms|s|x|B|GB)?$")
+
+
+def _parse_value(raw: str):
+    """'12.3ms' -> (12.3, 'ms'); 'True' -> (1.0, ''); 'hier' -> ('hier', '')."""
+    if raw in ("True", "False"):
+        return float(raw == "True"), ""
+    if raw in ("inf", "-inf", "nan"):
+        return float(raw), ""
+    m = _NUM_RE.match(raw)
+    if m:
+        unit = m.group("unit") or ""
+        return float(raw[:len(raw) - len(unit)]), unit
+    return raw, ""
+
+
+def emit(name: str, us_per_call: float, derived: str, *,
+         stable: bool = True):
+    """Print one CSV row AND record its content into the active ledger.
+
+    The `derived` column's ``k=v`` pairs become ledger metrics named
+    ``<name>/<k>`` (floats where they parse, strings otherwise; a trailing
+    us/ms/s/x/B unit is split off). A positive `us_per_call` is recorded as
+    ``<name>/us_per_call`` — wall-clock, hence always unstable. Pass
+    ``stable=False`` when the derived values themselves depend on
+    measurement (the diff gate then warns instead of failing on them).
+    """
     print(f"{name},{us_per_call:.3f},{derived}")
+    led = _ACTIVE
+    if led is None:
+        return
+    if us_per_call > 0:
+        led.record(f"{name}/us_per_call", float(us_per_call), unit="us",
+                   better="lower", stable=False)
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, _, raw = part.partition("=")
+        k, raw = k.strip(), raw.strip()
+        if not k or not raw:
+            continue
+        val, unit = _parse_value(raw)
+        is_wallclock = unit == "us" or k.endswith("_us")
+        led.record(f"{name}/{k}", val, unit=unit,
+                   stable=stable and not is_wallclock)
 
+
+# ---------------------------------------------------------------------------
+# timing + shared metric spellings
+# ---------------------------------------------------------------------------
 
 def fmt_exposed(exposed_by_key: dict) -> str:
     """The shared ``exposed_<policy>=<ms>`` metric spelling (one key per
@@ -28,6 +304,11 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall time per call in microseconds (CPU; jitted fns blocked)."""
     for _ in range(warmup):
         r = fn(*args)
+    if warmup > 0:
+        # block on the last warmup result: asynchronously dispatched warmup
+        # work must retire before the first timed iteration, or it bleeds
+        # into (and skews) the timed loop's median.
+        _block(r)
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()

@@ -2,36 +2,70 @@
 
   bench_prioritization -- 1.8-2.2x exposed-comm reduction (Xeon+10GbE)
   bench_scaling        -- Fig. 2 ResNet-50/Omni-Path scaling + TF/Horovod
+                          + fault-injected degradation scenarios
   bench_quantization   -- low-precision wire formats (volume/fidelity/kernel)
   bench_overlap        -- CommEngine overlap: measured vs modeled exposed comm
   bench_collectives    -- collectives-API microbench + modeled pod times
   bench_roofline       -- roofline terms from the dry-run artifacts
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV, and writes one perf-ledger artifact
+``BENCH_<module>.json`` per module (plus an aggregate ``BENCH_index.json``)
+into ``$BENCH_DIR`` (default ``artifacts/bench``) — the persisted perf
+trajectory that ``scripts/perf_table.py`` renders and diff-gates.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
 from benchmarks import (bench_collectives, bench_overlap,
                         bench_prioritization, bench_quantization,
-                        bench_roofline, bench_scaling)
+                        bench_roofline, bench_scaling, common)
 
 MODULES = [bench_prioritization, bench_scaling, bench_quantization,
            bench_overlap, bench_collectives, bench_roofline]
 
 
 def main() -> None:
+    out_dir = os.environ.get("BENCH_DIR", common.DEFAULT_BENCH_DIR)
     print("name,us_per_call,derived")
     failed = []
+    index = {}
     for mod in MODULES:
+        name = mod.__name__.rsplit(".", 1)[-1]
+        common.start_ledger(name)
+        status = "ok"
         try:
             mod.run()
         except Exception:                      # noqa: BLE001
             failed.append(mod.__name__)
+            status = "failed"
             traceback.print_exc(file=sys.stderr)
+        finally:
+            n_metrics = len(common.current_ledger().metrics)
+            path = common.finish_ledger(out_dir)
+        index[name] = {"artifact": os.path.basename(path),
+                       "status": status, "n_metrics": n_metrics}
+        print(f"ledger: {path} ({status}, {n_metrics} metrics)",
+              file=sys.stderr)
+
+    # aggregate: one index artifact tying the per-module ledgers of this run
+    # together (same schema; module metadata lives in each artifact)
+    agg = common.Ledger("index")
+    for name, info in index.items():
+        agg.record(f"index/{name}/n_metrics", float(info["n_metrics"]))
+        agg.record(f"index/{name}/status", info["status"])
+    rec = agg.to_record()
+    rec["modules"] = index
+    agg_path = os.path.join(out_dir, f"{common.ARTIFACT_PREFIX}index.json")
+    with open(agg_path, "w") as fh:
+        json.dump(rec, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"ledger: {agg_path} ({len(index)} modules)", file=sys.stderr)
+
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -1,22 +1,228 @@
-"""Render §Perf iteration comparisons from dry-run artifacts (tagged runs)."""
+"""Perf-ledger renderer and regression gate.
+
+Default mode renders a markdown table from the ``BENCH_<module>.json``
+artifacts a benchmark run wrote (``benchmarks/run.py`` / any module's
+``main()``; see benchmarks/common.py for the schema):
+
+  PYTHONPATH=src:. python scripts/perf_table.py [LEDGER_DIR]
+
+Diff mode compares two ledger directories and exits non-zero when a gated
+metric regresses beyond tolerance:
+
+  PYTHONPATH=src:. python scripts/perf_table.py --diff OLD_DIR NEW_DIR \
+      [--tol 0.01] [--time-tol T] [--warn-only]
+
+Gating rules:
+  * metrics with ``better`` = lower/higher and ``stable`` = true (model-
+    derived, deterministic) are gated at ``--tol`` relative tolerance;
+  * ``stable`` = false metrics (wall-clock-derived: us_per_call, measured
+    reductions) WARN only, unless ``--time-tol`` supplies an explicit
+    tolerance for them -- cross-host timing noise must not flake CI;
+  * string metrics (e.g. routing choices) warn on change, never gate;
+  * metrics that disappear between OLD and NEW warn, never gate.
+
+The legacy dry-run table (tagged roofline comparisons) is kept behind
+``--dryrun [ART_DIR]``.
+"""
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
 import sys
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:          # `from benchmarks import common`
+    sys.path.insert(0, _REPO_ROOT)
 
-def load_all(art="artifacts/dryrun"):
+from benchmarks import common  # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# loading
+# --------------------------------------------------------------------------
+
+def load_all(art="artifacts/dryrun", pattern="*.json"):
+    """Load every JSON record in a directory; skip (and report) corrupt
+    files instead of crashing, and never leak file handles."""
     out = {}
-    for f in glob.glob(os.path.join(art, "*.json")):
-        r = json.load(open(f))
-        if r.get("status") != "ok":
+    for f in sorted(glob.glob(os.path.join(art, pattern))):
+        try:
+            with open(f) as fh:
+                r = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"perf_table: skipping {f}: {e}", file=sys.stderr)
+            continue
+        if not isinstance(r, dict) or r.get("status", "ok") != "ok":
             continue
         out[os.path.basename(f)[:-5]] = r
     return out
 
+
+def load_ledgers(ledger_dir):
+    """{module: validated ledger record} from BENCH_*.json in a directory."""
+    out = {}
+    recs = load_all(ledger_dir, pattern=common.ARTIFACT_PREFIX + "*.json")
+    for name, rec in sorted(recs.items()):
+        try:
+            common.validate_ledger(rec)
+        except ValueError as e:
+            print(f"perf_table: skipping {name}: {e}", file=sys.stderr)
+            continue
+        out[rec["module"]] = rec
+    return out
+
+
+def _metrics(rec):
+    """{name: metric-entry} for one ledger record."""
+    return {m["name"]: m for m in rec["metrics"]}
+
+
+# --------------------------------------------------------------------------
+# render
+# --------------------------------------------------------------------------
+
+_TABLE_HEADER = ("| metric | value | unit | better | stable |\n"
+                 "|---|---:|---|---|---|")
+
+
+def _fmt_value(v):
+    if isinstance(v, str):
+        return v
+    if v != v or v in (float("inf"), float("-inf")):
+        return str(v)
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def render(ledgers):
+    lines = []
+    for module, rec in sorted(ledgers.items()):
+        sha = (rec.get("git_sha") or "")[:12]
+        lines.append(f"### {module}"
+                     + (f"  (`{sha}`)" if sha else "") + "\n")
+        lines.append(_TABLE_HEADER)
+        for m in rec["metrics"]:
+            lines.append(
+                f"| {m['name']} | {_fmt_value(m['value'])} |"
+                f" {m.get('unit') or ''} | {m.get('better') or ''} |"
+                f" {'yes' if m.get('stable', True) else 'no'} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# diff / gate
+# --------------------------------------------------------------------------
+
+def diff_metric(old, new, tol, *, atol=1e-12):
+    """Classify one old/new metric pair.
+
+    Returns (kind, detail) where kind is one of:
+      "ok"         -- within tolerance (or an ungated info metric)
+      "improved"   -- moved in the good direction beyond tolerance
+      "regressed"  -- moved in the bad direction beyond tolerance
+      "changed"    -- string metric whose value changed (warn-only)
+    """
+    ov, nv = old["value"], new["value"]
+    if isinstance(ov, str) or isinstance(nv, str):
+        if ov != nv:
+            return "changed", f"{ov!r} -> {nv!r}"
+        return "ok", ""
+    better = new.get("better") or old.get("better")
+    if better not in ("lower", "higher"):
+        return "ok", ""
+    span = max(abs(ov), atol)
+    delta = (nv - ov) / span
+    detail = f"{ov:.6g} -> {nv:.6g} ({delta:+.2%})"
+    if better == "lower":
+        if nv > ov + span * tol + atol:
+            return "regressed", detail
+        if nv < ov - span * tol - atol:
+            return "improved", detail
+    else:
+        if nv < ov - span * tol - atol:
+            return "regressed", detail
+        if nv > ov + span * tol + atol:
+            return "improved", detail
+    return "ok", ""
+
+
+def diff_ledgers(old_ledgers, new_ledgers, *, tol=0.01, time_tol=None):
+    """Compare two {module: record} maps.
+
+    Returns (regressions, warnings, improvements, n_compared) where each of
+    the first three is a list of human-readable strings. ``regressions`` is
+    the gated set: stable directional metrics beyond ``tol``, plus unstable
+    ones beyond ``time_tol`` when that was given.
+    """
+    regressions, warnings, improvements = [], [], []
+    n_compared = 0
+    for module in sorted(old_ledgers):
+        if module not in new_ledgers:
+            warnings.append(f"{module}: module missing from new ledger")
+            continue
+        om, nm = _metrics(old_ledgers[module]), _metrics(new_ledgers[module])
+        for name in om:
+            if name not in nm:
+                warnings.append(f"{module}:{name}: missing from new ledger")
+                continue
+            stable = (nm[name].get("stable", True)
+                      and om[name].get("stable", True))
+            use_tol = tol if stable else time_tol
+            kind, detail = diff_metric(om[name], nm[name],
+                                       use_tol if use_tol is not None
+                                       else tol)
+            n_compared += 1
+            line = f"{module}:{name}: {detail}"
+            if kind == "regressed":
+                if stable or time_tol is not None:
+                    regressions.append(line)
+                else:
+                    warnings.append(line + " [unstable, warn-only]")
+            elif kind == "changed":
+                warnings.append(line + " [value changed]")
+            elif kind == "improved":
+                improvements.append(line)
+    return regressions, warnings, improvements, n_compared
+
+
+def run_diff(old_dir, new_dir, *, tol, time_tol, warn_only):
+    old = load_ledgers(old_dir)
+    new = load_ledgers(new_dir)
+    if not old:
+        print(f"perf_table: no valid ledgers in {old_dir}", file=sys.stderr)
+        return 2
+    if not new:
+        print(f"perf_table: no valid ledgers in {new_dir}", file=sys.stderr)
+        return 2
+    regressions, warnings, improvements, n = diff_ledgers(
+        old, new, tol=tol, time_tol=time_tol)
+    print(f"perf diff: {old_dir} -> {new_dir}  "
+          f"({n} metrics compared, tol={tol:g}"
+          + (f", time_tol={time_tol:g}" if time_tol is not None else "")
+          + ")")
+    for line in improvements:
+        print(f"  IMPROVED  {line}")
+    for line in warnings:
+        print(f"  WARN      {line}")
+    for line in regressions:
+        print(f"  REGRESSED {line}")
+    if regressions:
+        verdict = "FAIL" if not warn_only else "WARN (gate disabled)"
+        print(f"perf diff: {len(regressions)} regression(s) -> {verdict}")
+        return 0 if warn_only else 1
+    print(f"perf diff: clean ({len(warnings)} warning(s), "
+          f"{len(improvements)} improvement(s))")
+    return 0
+
+
+# --------------------------------------------------------------------------
+# legacy dry-run table
+# --------------------------------------------------------------------------
 
 def row(recs, tag, label):
     r = recs.get(tag)
@@ -57,10 +263,54 @@ GROUPS = {
 }
 
 
-if __name__ == "__main__":
-    recs = load_all(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+def run_dryrun(art_dir):
+    recs = load_all(art_dir)
     for name, rows in GROUPS.items():
         print(f"### {name}\n\n{HEADER}")
         for tag, label in rows:
             print(row(recs, tag, label))
         print()
+    return 0
+
+
+# --------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("ledger_dir", nargs="?", default=common.DEFAULT_BENCH_DIR,
+                    help="ledger directory to render (default: %(default)s)")
+    ap.add_argument("--diff", nargs=2, metavar=("OLD", "NEW"),
+                    help="diff two ledger directories; non-zero exit on "
+                         "regression")
+    ap.add_argument("--tol", type=float, default=0.01,
+                    help="relative tolerance for stable metrics "
+                         "(default: %(default)s)")
+    ap.add_argument("--time-tol", type=float, default=None,
+                    help="tolerance for wall-clock (stable=false) metrics; "
+                         "omit to keep them warn-only")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0")
+    ap.add_argument("--dryrun", nargs="?", const="artifacts/dryrun",
+                    metavar="ART_DIR",
+                    help="legacy mode: render the tagged dry-run roofline "
+                         "table from ART_DIR")
+    args = ap.parse_args(argv)
+
+    if args.dryrun is not None:
+        return run_dryrun(args.dryrun)
+    if args.diff is not None:
+        return run_diff(args.diff[0], args.diff[1], tol=args.tol,
+                        time_tol=args.time_tol, warn_only=args.warn_only)
+
+    ledgers = load_ledgers(args.ledger_dir)
+    if not ledgers:
+        print(f"perf_table: no valid ledgers in {args.ledger_dir} "
+              "(run `PYTHONPATH=src:. python benchmarks/run.py` first)",
+              file=sys.stderr)
+        return 2
+    print(render(ledgers))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

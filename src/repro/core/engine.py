@@ -189,14 +189,30 @@ class CommEngine:
 
     # -- residual (error-feedback) state -----------------------------------
 
+    def ef_applied(self, bi: int) -> bool:
+        """Does bucket `bi` actually run the error-feedback int8 wire?
+
+        Non-fusable (model-sharded) buckets are forced onto the bf16 wire by
+        `reduce_chained` and carry their residual entry through unchanged, so
+        allocating them a real residual buffer would waste fp32 memory
+        proportional to the model's sharded footprint."""
+        return self.plan.use_ef and self.plan.fusable[bi]
+
     def init_residuals(self):
         """Global-view zero residuals: per-rank shard shape x dp ranks (the
-        shard_map in_spec splits them back to one fabric shard per rank)."""
+        shard_map in_spec splits them back to one fabric shard per rank).
+
+        Only buckets whose data path applies error feedback (fusable ones —
+        see `ef_applied`) get real buffers; the rest hold zero-length
+        placeholders so the residual tuple keeps one entry per bucket and
+        `residual_specs` stays aligned."""
         p = self.plan
         if not p.use_ef:
             return None
 
         def shard(bi, b):
+            if not self.ef_applied(bi):
+                return 0
             if p.algos[bi] == planner_lib.ALGO_HIER:
                 return hier_lib.ef_residual_shape(b.n_elems, p.n_local,
                                                   p.n_node)[0]

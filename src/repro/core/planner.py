@@ -281,20 +281,28 @@ def estimate_overlap(buckets, algos, nodes: int, topo: hw.Topology,
     return off, on
 
 
-def choose_allreduce_algo(nbytes: float, nodes: int,
-                          topo: hw.Topology) -> str:
+def choose_allreduce_algo(nbytes: float, nodes: int, topo: hw.Topology,
+                          fault=None) -> str:
     """Pick flat vs two-level allreduce for one message from the per-level
     bandwidth/latency model (repro.core.hw).
 
     The hierarchy wins when the fabric-volume saving (1/local_size of the
-    bytes cross the slow link) beats the two extra intra-node phases; for
-    tiny latency-bound messages on shallow hierarchies the flat ring can
-    still be cheaper. The bucket scheduler applies this per fused message
-    (scheduler.route_buckets), and the trainer routes each bucket through
-    it when `CommConfig(hier=True, topo=...)` names a topology.
+    bytes cross the slow link) beats the two extra intra-node phases; when
+    the intra transport is the slower path (virtualized cloud stacks,
+    hw.CLOUD_VIRT) bulk messages can legitimately route flat. The bucket
+    scheduler applies this per fused message (scheduler.route_buckets), and
+    the trainer routes each bucket through it when
+    `CommConfig(hier=True, topo=...)` names a topology.
+
+    `fault` (simulator.FaultSpec) composes injected degradation onto the
+    topology before costing, so routing re-plans under the degraded model
+    — e.g. a congested inter fabric shifts the flat/hier crossover and
+    re-routes bulk buckets onto the hierarchy.
     """
     if topo.local_size <= 1 or nodes <= 1:
         return ALGO_FLAT
+    if fault is not None:
+        topo = fault.apply_to_topology(topo)
     t_flat = hw.flat_allreduce_time(nbytes, nodes, topo)
     t_hier = hw.hier_allreduce_time(nbytes, nodes, topo)
     return ALGO_HIER if t_hier < t_flat else ALGO_FLAT

@@ -165,7 +165,7 @@ def reduce_with_priority(grad_tree, reduce_fn: Callable[[jax.Array, Bucket], jax
 
 
 def route_buckets(plan: BucketPlan, topo, nodes: int, *,
-                  bytes_per_elem: float = 4.0) -> tuple:
+                  bytes_per_elem: float = 4.0, fault=None) -> tuple:
     """Per-bucket flat-vs-hierarchical routing over a machine hierarchy.
 
     For each fused message, asks the per-level cost model which allreduce
@@ -174,10 +174,17 @@ def route_buckets(plan: BucketPlan, topo, nodes: int, *,
     bucket, in plan order -- the structural analog of MLSL choosing its
     intra/inter phase split per message. Small, latency-bound urgent buckets
     can legitimately route flat while bulk buckets go hierarchical.
+
+    `fault` (simulator.FaultSpec) re-routes every bucket under an injected
+    degradation of the topology's links: a degraded inter fabric moves the
+    flat/hier crossover, so buckets that routed flat on the healthy machine
+    may re-route onto the two-level decomposition (and vice versa for a
+    degraded intra transport).
     """
     from repro.core import planner as pl
     return tuple(
-        pl.choose_allreduce_algo(b.n_elems * bytes_per_elem, nodes, topo)
+        pl.choose_allreduce_algo(b.n_elems * bytes_per_elem, nodes, topo,
+                                 fault=fault)
         for b in plan.buckets)
 
 

@@ -71,6 +71,63 @@ class _Job:
     duration: float
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Injected degradation for a simulated iteration (the paper's
+    Cloud-vs-HPC story off the happy path; Keuper & Pfreundt 1609.06870).
+
+    * ``straggler_slowdown`` (>= 1): the slowest node's compute runs this
+      much slower. Synchronous SGD is paced by the critical-path node, so
+      the simulator scales the modeled compute timeline by it; the wait is
+      accounted as EXPOSED time (``compute_time`` stays the healthy value),
+      since cycles spent waiting on a straggler buy no useful work.
+      ``straggler_node`` optionally names which node (metadata only — the
+      single-server model tracks the critical path, not identities).
+    * ``inter_bw_factor`` / ``inter_latency_factor``: degraded inter-node
+      fabric (congestion, oversubscription). Without a topology these apply
+      to the bare ``link``, which *is* the fabric.
+    * ``intra_bw_factor`` / ``intra_latency_factor``: degraded intra-node
+      transport (shared-memory pressure, virtio stack contention).
+    * ``hetero_link_bw_factors``: per-link bandwidth factors of a
+      heterogeneous fabric; a ring is paced by its slowest link, so the
+      minimum composes into the effective fabric bandwidth.
+    """
+
+    straggler_slowdown: float = 1.0
+    straggler_node: int | None = None
+    inter_bw_factor: float = 1.0
+    inter_latency_factor: float = 1.0
+    intra_bw_factor: float = 1.0
+    intra_latency_factor: float = 1.0
+    hetero_link_bw_factors: tuple = ()
+
+    @property
+    def worst_inter_bw_factor(self) -> float:
+        worst = min(self.hetero_link_bw_factors, default=1.0)
+        return min(self.inter_bw_factor, worst)
+
+    def apply_to_link(self, link: hw.Link) -> hw.Link:
+        """Degrade a bare fabric link (the no-topology case)."""
+        return hw.LinkDegradation(
+            bw_factor=self.worst_inter_bw_factor,
+            latency_factor=self.inter_latency_factor).apply(link)
+
+    def apply_to_topology(self, topo: hw.Topology) -> hw.Topology:
+        """Compose this fault onto a (possibly already degraded) topology."""
+        return topo.degrade(intra_bw=self.intra_bw_factor,
+                            intra_latency=self.intra_latency_factor,
+                            inter_bw=self.worst_inter_bw_factor,
+                            inter_latency=self.inter_latency_factor,
+                            straggler=self.straggler_slowdown)
+
+    @property
+    def compute_slowdown(self) -> float:
+        return max(self.straggler_slowdown, 1.0)
+
+
+HEALTHY_FAULT = FaultSpec()
+
+
 def _allreduce_durations(layers: Sequence[SimLayer], p: int, link: hw.Link,
                          overlap_eff: float = 1.0,
                          topo: hw.Topology | None = None,
@@ -157,7 +214,8 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
                        record_timeline: bool = False,
                        overlap_eff: float = 1.0,
                        topo: hw.Topology | None = None,
-                       comm_algo: str = "auto") -> IterationStats:
+                       comm_algo: str = "auto",
+                       fault: FaultSpec | None = None) -> IterationStats:
     """Simulate bwd(iter k) + allreduce + fwd(iter k+1) under a policy.
 
     Backward runs layers L-1..0; layer i's allreduce becomes ready when its
@@ -168,9 +226,22 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
     With `topo`, `p` counts nodes of `topo.local_size` ranks and the
     collectives are costed on the two-level hierarchy (`comm_algo` selects
     flat / hier / per-message auto); `link` is then ignored.
+
+    With a `fault` (FaultSpec), the links are degraded (composed onto
+    `topo`'s own degradation factors, or onto the bare `link`) and a
+    straggler stretches the compute timeline; `compute_time` stays the
+    HEALTHY compute, so straggler wait shows up as exposed time and every
+    fault is monotone in both `total_time` and `exposed_comm`.
     """
     n = len(layers)
     compute = sum(l.fwd_time + l.bwd_time for l in layers)
+    if fault is not None:
+        if topo is not None:
+            topo = fault.apply_to_topology(topo)
+        else:
+            link = fault.apply_to_link(link)
+    slow = max(1.0, topo.straggler if topo is not None else 1.0,
+               fault.compute_slowdown if fault is not None else 1.0)
     durations = _allreduce_durations(layers, p, link,
                                      overlap_eff=overlap_eff,
                                      topo=topo, comm_algo=comm_algo)
@@ -180,11 +251,11 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
         t = 0.0
         done = [0.0] * n
         for i in range(n - 1, -1, -1):
-            t += layers[i].bwd_time
+            t += layers[i].bwd_time * slow
             t += durations[i]          # synchronous allreduce, no overlap
             done[i] = t
         for i in range(n):
-            t += layers[i].fwd_time
+            t += layers[i].fwd_time * slow
         total = t
         return IterationStats(policy=policy, total_time=total,
                               compute_time=compute,
@@ -196,7 +267,7 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
     t = 0.0
     jobs = []
     for i in range(n - 1, -1, -1):
-        t += layers[i].bwd_time
+        t += layers[i].bwd_time * slow
         jobs.append(_Job(layer=i, ready=t, duration=durations[i]))
         if record_timeline:
             timeline.append((f"bwd_done:{layers[i].name}", t))
@@ -209,7 +280,7 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
 
     t = bwd_end
     for i in range(n):
-        t = max(t, done[i]) + layers[i].fwd_time
+        t = max(t, done[i]) + layers[i].fwd_time * slow
         if record_timeline:
             timeline.append((f"fwd_done:{layers[i].name}", t))
     total = t
@@ -223,28 +294,45 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
 def scaling_efficiency(layers: Sequence[SimLayer], p: int, link: hw.Link,
                        policy: Policy = Policy.PRIORITY_OVERLAP,
                        topo: hw.Topology | None = None,
-                       comm_algo: str = "auto") -> float:
+                       comm_algo: str = "auto",
+                       overlap_eff: float = 1.0,
+                       fault: FaultSpec | None = None) -> float:
     """Weak-scaling efficiency at p nodes (fixed per-node mini-batch).
 
     efficiency = compute-only time / simulated iteration time.
 
     With a `topo`, p counts NODES: a single node still holds
     topo.local_size communicating ranks, so p == 1 is only trivially
-    efficient when the whole hierarchy is one rank.
+    efficient when the whole hierarchy is one rank. With a `fault`,
+    straggler wait and degraded links both cut efficiency (the healthy
+    compute is the numerator).
     """
     ranks = topo.flat_size(p) if topo is not None else p
-    if ranks <= 1:
+    if ranks <= 1 and (fault is None or fault.compute_slowdown <= 1.0):
         return 1.0
     stats = simulate_iteration(layers, p, link, policy, topo=topo,
-                               comm_algo=comm_algo)
+                               comm_algo=comm_algo, overlap_eff=overlap_eff,
+                               fault=fault)
     return stats.compute_time / stats.total_time
 
 
 def exposed_comm_reduction(layers: Sequence[SimLayer], p: int,
-                           link: hw.Link) -> float:
-    """Paper headline metric: exposed-comm(FIFO) / exposed-comm(PRIORITY)."""
-    fifo = simulate_iteration(layers, p, link, Policy.FIFO_OVERLAP)
-    prio = simulate_iteration(layers, p, link, Policy.PRIORITY_OVERLAP)
+                           link: hw.Link, *,
+                           overlap_eff: float = 1.0,
+                           topo: hw.Topology | None = None,
+                           comm_algo: str = "auto",
+                           fault: FaultSpec | None = None) -> float:
+    """Paper headline metric: exposed-comm(FIFO) / exposed-comm(PRIORITY).
+
+    Accepts the same knobs as its siblings (`simulate_iteration`,
+    `scaling_efficiency`) so the headline can be computed on a hierarchical
+    topology, under imperfect async progress, or under injected faults —
+    both policies see identical conditions, keeping the ratio fair.
+    """
+    kw = dict(overlap_eff=overlap_eff, topo=topo, comm_algo=comm_algo,
+              fault=fault)
+    fifo = simulate_iteration(layers, p, link, Policy.FIFO_OVERLAP, **kw)
+    prio = simulate_iteration(layers, p, link, Policy.PRIORITY_OVERLAP, **kw)
     if prio.exposed_comm <= 0:
         return float("inf") if fifo.exposed_comm > 0 else 1.0
     return fifo.exposed_comm / prio.exposed_comm

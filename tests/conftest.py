@@ -2,6 +2,8 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root: `benchmarks` / `scripts` namespace packages (perf ledger tests)
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 # Give the in-process suite an 8-chip view of the CPU so multi-rank
 # semantics (hierarchical collectives, factored meshes) are testable

@@ -174,8 +174,36 @@ def test_engine_ef_residual_state(mesh8):
     assert len(specs) == engine.plan.n_buckets
     # flat-routed bucket residuals: dp * per-rank fabric shard
     from repro.core import collectives as cl
-    for r, b in zip(res, engine.plan.buckets.buckets):
+    for bi, (r, b) in enumerate(zip(res, engine.plan.buckets.buckets)):
+        assert engine.ef_applied(bi)
         assert r.shape == (cl.ef_residual_shape(b.n_elems, 8)[0] * 8,)
+
+
+def test_engine_ef_residuals_only_where_applied(mesh8):
+    """Non-fusable buckets ride the bf16 wire (no EF) and must not be
+    allocated fp32 residual buffers — only zero-length placeholders that
+    keep the residual-tuple arity and specs aligned."""
+    comm = eng.CommConfig(mode="mlsl", wire="int8", error_feedback=True)
+    engine = eng.CommEngine.create(_tree(), comm, mesh8, DATA_AXES,
+                                   leaf_replicated=lambda path: False)
+    assert engine.plan.use_ef and not any(engine.plan.fusable)
+    res = engine.init_residuals()
+    assert len(res) == engine.plan.n_buckets
+    assert all(r.shape == (0,) for r in res)
+    res_spec = engine.residual_specs(P(DATA_AXES))
+    assert len(res_spec) == engine.plan.n_buckets
+    # the data path carries the placeholders through unchanged
+    tree = _tree()
+    tspec = jax.tree_util.tree_map(lambda _: P(), tree)
+    out, new_res = jax.jit(compat.shard_map(
+        lambda t, r: engine.reduce(t, r), mesh=mesh8,
+        in_specs=(tspec, res_spec), out_specs=(tspec, res_spec),
+        axis_names=set(DATA_AXES), check_vma=False))(tree, res)
+    assert all(r.shape == (0,) for r in new_res)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=1e-2, atol=1e-2),
+        out, tree)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,184 @@
+"""Fault-injected degradation: monotonicity of the simulator under injected
+faults, and bucket routing under a degraded cost model (core/hw.py
+LinkDegradation/Topology.degrade, core/simulator.py FaultSpec,
+planner.choose_allreduce_algo / scheduler.route_buckets)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import cnn_tables
+from repro.core import hw, planner, scheduler, simulator as sim
+
+FAULTS = {
+    "inter_bw": sim.FaultSpec(inter_bw_factor=0.5),
+    "inter_latency": sim.FaultSpec(inter_latency_factor=3.0),
+    "intra_bw": sim.FaultSpec(intra_bw_factor=0.3),
+    "straggler": sim.FaultSpec(straggler_slowdown=1.5, straggler_node=3),
+    "hetero": sim.FaultSpec(hetero_link_bw_factors=(1.0, 0.5, 0.9)),
+    "compound": sim.FaultSpec(inter_bw_factor=0.7, straggler_slowdown=1.2,
+                              intra_latency_factor=2.0),
+}
+
+
+def _layers(bs=64):
+    return sim.layers_from_specs(cnn_tables.resnet50_layers(), bs,
+                                 hw.XEON_6148)
+
+
+# --------------------------------------------------------------------------
+# hw: LinkDegradation / Topology.degrade
+# --------------------------------------------------------------------------
+
+def test_link_degradation_apply():
+    deg = hw.LinkDegradation(bw_factor=0.5, latency_factor=2.0)
+    link = deg.apply(hw.ETH_10G)
+    assert link.bw == pytest.approx(hw.ETH_10G.bw * 0.5)
+    assert link.latency == pytest.approx(hw.ETH_10G.latency * 2.0)
+    assert link.name.endswith("!deg")
+    assert hw.HEALTHY.healthy
+    assert hw.HEALTHY.apply(hw.ETH_10G) is hw.ETH_10G
+
+
+def test_link_degradation_never_improves():
+    # factors >1 bw / <1 latency must not make the link FASTER
+    deg = hw.LinkDegradation(bw_factor=1.5, latency_factor=0.5)
+    link = deg.apply(hw.ETH_10G)
+    assert link.bw <= hw.ETH_10G.bw
+    assert link.latency >= hw.ETH_10G.latency
+
+
+def test_topology_degrade_composes():
+    t1 = hw.CLOUD_10G.degrade(inter_bw=0.5, straggler=1.5)
+    t2 = t1.degrade(inter_bw=0.8, straggler=1.2)
+    assert t2.effective_inter.bw == pytest.approx(hw.CLOUD_10G.inter.bw
+                                                  * 0.5 * 0.8)
+    assert t2.straggler == pytest.approx(1.5 * 1.2)
+    # healthy topology is untouched (frozen dataclass, new instances only)
+    assert hw.CLOUD_10G.straggler == 1.0
+    assert hw.CLOUD_10G.effective_inter is hw.CLOUD_10G.inter
+
+
+def test_degraded_allreduce_times_monotone():
+    nbytes = 25e6
+    for topo in hw.TOPOLOGIES.values():
+        for algo_time in (hw.flat_allreduce_time, hw.hier_allreduce_time):
+            t0 = algo_time(nbytes, 16, topo)
+            t1 = algo_time(nbytes, 16, topo.degrade(inter_bw=0.5))
+            t2 = algo_time(nbytes, 16,
+                           topo.degrade(inter_bw=0.5, intra_bw=0.5,
+                                        inter_latency=2.0))
+            assert t0 <= t1 + 1e-12 <= t2 + 1e-9
+
+
+# --------------------------------------------------------------------------
+# simulator: FaultSpec monotonicity
+# --------------------------------------------------------------------------
+
+def test_fault_spec_worst_link():
+    f = sim.FaultSpec(inter_bw_factor=0.8,
+                      hetero_link_bw_factors=(1.0, 0.6, 0.9))
+    assert f.worst_inter_bw_factor == pytest.approx(0.6)
+    link = f.apply_to_link(hw.ETH_10G)
+    assert link.bw == pytest.approx(hw.ETH_10G.bw * 0.6)
+
+
+@pytest.mark.parametrize("policy", list(sim.Policy))
+@pytest.mark.parametrize("name", sorted(FAULTS))
+def test_fault_never_speeds_up_iteration(policy, name):
+    """Degrading any link or adding a straggler never decreases exposed
+    comm or total time -- on the bare-link path and the topology path."""
+    layers = _layers()
+    fault = FAULTS[name]
+    for topo in (None, hw.CLOUD_10G):
+        healthy = sim.simulate_iteration(layers, 64, hw.ETH_10G, policy,
+                                         topo=topo)
+        faulty = sim.simulate_iteration(layers, 64, hw.ETH_10G, policy,
+                                        topo=topo, fault=fault)
+        assert faulty.total_time >= healthy.total_time - 1e-9
+        assert faulty.exposed_comm >= healthy.exposed_comm - 1e-9
+        # straggler waits are exposed, not counted as useful compute
+        assert faulty.compute_time == pytest.approx(healthy.compute_time)
+
+
+def test_straggler_degrades_scaling_efficiency():
+    layers = _layers()
+    eff0 = sim.scaling_efficiency(layers, 64, hw.ETH_10G, overlap_eff=0.7)
+    eff = sim.scaling_efficiency(layers, 64, hw.ETH_10G, overlap_eff=0.7,
+                                 fault=sim.FaultSpec(straggler_slowdown=1.5))
+    assert eff < eff0
+    # a 1.5x straggler bounds efficiency by 1/1.5 even with free comm
+    assert eff <= 1 / 1.5 + 1e-6
+
+
+def test_exposed_comm_reduction_honors_fault():
+    layers = _layers()
+    r0 = sim.exposed_comm_reduction(layers, 64, hw.ETH_10G,
+                                    overlap_eff=0.7, topo=hw.CLOUD_10G)
+    r1 = sim.exposed_comm_reduction(
+        layers, 64, hw.ETH_10G, overlap_eff=0.7, topo=hw.CLOUD_10G,
+        fault=sim.FaultSpec(inter_bw_factor=0.5))
+    assert r0 >= 1.0 - 1e-9 and r1 >= 1.0 - 1e-9  # prioritization never hurts
+
+
+# --------------------------------------------------------------------------
+# routing under degradation
+# --------------------------------------------------------------------------
+
+def test_routing_flips_flat_to_hier_on_degraded_inter():
+    """CLOUD_VIRT (virtio intra slower than SR-IOV inter): bulk buckets route
+    FLAT healthy; degrading the inter fabric pushes them back to HIER."""
+    fault = sim.FaultSpec(inter_bw_factor=0.4)
+    flipped = []
+    for mb in (16.0, 25.0, 64.0):
+        healthy = planner.choose_allreduce_algo(mb * 1e6, 16, hw.CLOUD_VIRT)
+        degraded = planner.choose_allreduce_algo(mb * 1e6, 16, hw.CLOUD_VIRT,
+                                                 fault=fault)
+        flipped.append((healthy, degraded))
+    assert all(h == planner.ALGO_FLAT for h, _ in flipped)
+    assert all(d == planner.ALGO_HIER for _, d in flipped)
+
+
+@pytest.mark.parametrize("name", sorted(FAULTS))
+def test_routing_never_picks_dominated_algo(name):
+    """Under any injected fault the chosen algorithm's cost on the DEGRADED
+    topology is <= the alternative's -- routing is never strictly
+    dominated."""
+    fault = FAULTS[name]
+    for topo in hw.TOPOLOGIES.values():
+        for nbytes in (4e3, 1e6, 25e6, 1e8):
+            algo = planner.choose_allreduce_algo(nbytes, 16, topo,
+                                                 fault=fault)
+            deg = fault.apply_to_topology(topo)
+            t_flat = hw.flat_allreduce_time(nbytes, 16, deg)
+            t_hier = hw.hier_allreduce_time(nbytes, 16, deg)
+            chosen = t_flat if algo == planner.ALGO_FLAT else t_hier
+            assert chosen <= min(t_flat, t_hier) + 1e-12, \
+                f"{topo.name} nbytes={nbytes:g}: {algo} dominated"
+
+
+def test_route_buckets_accepts_fault():
+    sizes = [int(mb * 1e6 / 4) for mb in (0.25, 16.0, 25.0, 64.0)]
+    tree = {f"l{i}": np.broadcast_to(np.float32(0), (n,))
+            for i, n in enumerate(sizes)}
+    plan = scheduler.plan_buckets(tree, bucket_bytes=1.0)  # 1 leaf/bucket
+    healthy = scheduler.route_buckets(plan, hw.CLOUD_VIRT, 16)
+    degraded = scheduler.route_buckets(
+        plan, hw.CLOUD_VIRT, 16, fault=sim.FaultSpec(inter_bw_factor=0.4))
+    assert len(healthy) == len(degraded) == len(sizes)
+    assert healthy != degraded          # the degraded fabric re-routes
+    assert all(a in (planner.ALGO_FLAT, planner.ALGO_HIER)
+               for a in list(healthy) + list(degraded))
+
+
+def test_healthy_fault_is_identity():
+    layers = _layers()
+    for policy in sim.Policy:
+        a = sim.simulate_iteration(layers, 64, hw.ETH_10G, policy,
+                                   topo=hw.CLOUD_10G)
+        b = sim.simulate_iteration(layers, 64, hw.ETH_10G, policy,
+                                   topo=hw.CLOUD_10G, fault=sim.HEALTHY_FAULT)
+        assert a.total_time == pytest.approx(b.total_time)
+        assert a.exposed_comm == pytest.approx(b.exposed_comm)
+    assert planner.choose_allreduce_algo(25e6, 16, hw.CLOUD_VIRT,
+                                         fault=sim.HEALTHY_FAULT) \
+        == planner.choose_allreduce_algo(25e6, 16, hw.CLOUD_VIRT)

@@ -1,0 +1,199 @@
+"""Perf-ledger schema round-trip and regression-gate semantics
+(benchmarks/common.py + scripts/perf_table.py)."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks import common
+from scripts import perf_table
+
+
+def _sample_ledger(module="bench_demo", exposed=10.0):
+    led = common.Ledger(module)
+    led.record("demo/exposed_comm_s", exposed, unit="s")
+    led.record("demo/scaling_eff", 0.93)
+    led.record("demo/step/us_per_call", 120.0, unit="us", stable=False)
+    led.record("demo/algo", "hier")
+    led.record("demo/wire_bytes", 4096.0, better=None)
+    return led
+
+
+# --------------------------------------------------------------------------
+# schema + round trip
+# --------------------------------------------------------------------------
+
+def test_classify_metric_directions():
+    assert common.classify_metric("x/exposed_comm") == "lower"
+    assert common.classify_metric("x/t_total_ms") == "lower"
+    assert common.classify_metric("x/latency", "us") == "lower"
+    assert common.classify_metric("x/scaling_eff") == "higher"
+    assert common.classify_metric("x/reduction") == "higher"
+    assert common.classify_metric("x/throughput") == "higher"
+    assert common.classify_metric("x/wire_bytes") is None
+
+
+def test_ledger_roundtrip(tmp_path):
+    led = _sample_ledger()
+    path = led.write(tmp_path)
+    assert os.path.basename(path) == "BENCH_bench_demo.json"
+    with open(path) as fh:
+        rec = json.load(fh)
+    common.validate_ledger(rec)          # no raise
+    assert rec["schema_version"] == common.SCHEMA_VERSION
+    assert rec["module"] == "bench_demo"
+    assert rec["git_sha"]
+    assert isinstance(rec["device_count"], int)
+    by_name = {m["name"]: m for m in rec["metrics"]}
+    assert by_name["demo/exposed_comm_s"]["better"] == "lower"
+    assert by_name["demo/exposed_comm_s"]["stable"] is True
+    assert by_name["demo/scaling_eff"]["better"] == "higher"
+    assert by_name["demo/step/us_per_call"]["stable"] is False
+    assert by_name["demo/algo"]["value"] == "hier"
+    assert by_name["demo/wire_bytes"]["better"] is None
+
+    loaded = perf_table.load_ledgers(str(tmp_path))
+    assert loaded == {"bench_demo": rec}
+
+
+@pytest.mark.parametrize("mutate,err", [
+    (lambda r: r.pop("module"), "module"),
+    (lambda r: r.pop("metrics"), "metrics"),
+    (lambda r: r.update(schema_version=common.SCHEMA_VERSION + 1), "schema"),
+    (lambda r: r["metrics"].append({"value": 1.0}), "malformed"),
+    (lambda r: r["metrics"][0].update(better="sideways"), "better"),
+])
+def test_validate_ledger_rejects(mutate, err):
+    rec = _sample_ledger().to_record()
+    mutate(rec)
+    with pytest.raises(ValueError, match=err):
+        common.validate_ledger(rec)
+
+
+def test_emit_records_parsed_metrics(capsys):
+    common.start_ledger("bench_emit_test")
+    try:
+        common.emit("k/row", 12.5,
+                    "reduction=1.90x;algo=flat;ok=True;t_ms=3.5;"
+                    "eff=0.93;note_free_text")
+        led = common.current_ledger()
+    finally:
+        common._ACTIVE = None
+    out = capsys.readouterr().out
+    assert "k/row,12.500,reduction=1.90x" in out     # CSV unchanged
+    by_name = {m.name: m for m in led.metrics}
+    assert by_name["k/row/us_per_call"].value == 12.5
+    assert by_name["k/row/us_per_call"].stable is False
+    assert by_name["k/row/reduction"].value == pytest.approx(1.90)
+    assert by_name["k/row/reduction"].better == "higher"
+    assert by_name["k/row/algo"].value == "flat"
+    assert by_name["k/row/ok"].value == 1.0
+    assert by_name["k/row/t_ms"].value == pytest.approx(3.5)
+    assert by_name["k/row/t_ms"].better == "lower"
+    assert by_name["k/row/eff"].better == "higher"
+    assert "k/row/note_free_text" not in by_name     # no k=v -> not a metric
+
+
+def test_run_with_ledger_writes_artifact_on_failure(tmp_path, capsys):
+    with pytest.raises(ZeroDivisionError):
+        common.run_with_ledger("bench_boom", lambda: 1 / 0,
+                               out_dir=str(tmp_path))
+    # artifact still written (ci must see partial results of a dead run)
+    assert (tmp_path / "BENCH_bench_boom.json").exists()
+    capsys.readouterr()
+
+
+def test_time_fn_smoke():
+    # S1 regression guard: warmup results are blocked on before the timed
+    # region; warmup=0 must not crash either
+    assert common.time_fn(lambda: 123, iters=2) >= 0.0
+    assert common.time_fn(lambda: 123, iters=1, warmup=0) >= 0.0
+
+
+# --------------------------------------------------------------------------
+# diff gate
+# --------------------------------------------------------------------------
+
+def _write_pair(tmp_path, old_exposed, new_exposed):
+    old_dir, new_dir = tmp_path / "old", tmp_path / "new"
+    old_dir.mkdir(), new_dir.mkdir()
+    _sample_ledger(exposed=old_exposed).write(old_dir)
+    _sample_ledger(exposed=new_exposed).write(new_dir)
+    return str(old_dir), str(new_dir)
+
+
+def test_diff_identical_ledgers_clean(tmp_path):
+    led = _sample_ledger()
+    for d in ("old", "new"):
+        (tmp_path / d).mkdir()
+        led.write(tmp_path / d)
+    rc = perf_table.main(["--diff", str(tmp_path / "old"),
+                          str(tmp_path / "new")])
+    assert rc == 0
+
+
+def test_diff_detects_injected_regression(tmp_path, capsys):
+    old_dir, new_dir = _write_pair(tmp_path, 10.0, 12.0)   # +20% exposed
+    rc = perf_table.main(["--diff", old_dir, new_dir, "--tol", "0.05"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "demo/exposed_comm_s" in out
+
+
+def test_diff_improvement_is_not_regression(tmp_path, capsys):
+    old_dir, new_dir = _write_pair(tmp_path, 10.0, 8.0)    # -20% exposed
+    rc = perf_table.main(["--diff", old_dir, new_dir, "--tol", "0.05"])
+    assert rc == 0
+    assert "IMPROVED" in capsys.readouterr().out
+
+
+def test_diff_higher_better_regression(tmp_path):
+    old_dir, new_dir = (tmp_path / "old", tmp_path / "new")
+    old_dir.mkdir(), new_dir.mkdir()
+    for d, eff in ((old_dir, 0.95), (new_dir, 0.80)):
+        led = common.Ledger("bench_eff")
+        led.record("eff/scaling_eff", eff)
+        led.write(d)
+    assert perf_table.main(["--diff", str(old_dir), str(new_dir)]) == 1
+
+
+def test_diff_unstable_metric_warns_not_gates(tmp_path, capsys):
+    old_dir, new_dir = (tmp_path / "old", tmp_path / "new")
+    old_dir.mkdir(), new_dir.mkdir()
+    for d, us in ((old_dir, 100.0), (new_dir, 300.0)):     # 3x wall clock
+        led = common.Ledger("bench_wall")
+        led.record("wall/us_per_call", us, unit="us", stable=False)
+        led.write(d)
+    assert perf_table.main(["--diff", str(old_dir), str(new_dir)]) == 0
+    assert "warn-only" in capsys.readouterr().out
+    # ... unless an explicit wall-clock tolerance is requested
+    assert perf_table.main(["--diff", str(old_dir), str(new_dir),
+                            "--time-tol", "0.5"]) == 1
+    capsys.readouterr()
+
+
+def test_diff_string_change_warns(tmp_path, capsys):
+    old_dir, new_dir = (tmp_path / "old", tmp_path / "new")
+    old_dir.mkdir(), new_dir.mkdir()
+    for d, algo in ((old_dir, "flat"), (new_dir, "hier")):
+        led = common.Ledger("bench_route")
+        led.record("route/algo", algo)
+        led.write(d)
+    assert perf_table.main(["--diff", str(old_dir), str(new_dir)]) == 0
+    assert "value changed" in capsys.readouterr().out
+
+
+def test_diff_warn_only_flag(tmp_path, capsys):
+    old_dir, new_dir = _write_pair(tmp_path, 10.0, 12.0)
+    rc = perf_table.main(["--diff", old_dir, new_dir, "--warn-only"])
+    assert rc == 0
+    capsys.readouterr()
+
+
+def test_load_all_skips_corrupt_files(tmp_path, capsys):
+    (tmp_path / "BENCH_corrupt.json").write_text("{nope")
+    _sample_ledger().write(tmp_path)
+    loaded = perf_table.load_ledgers(str(tmp_path))
+    assert list(loaded) == ["bench_demo"]
+    assert "skipping" in capsys.readouterr().err
