@@ -21,7 +21,8 @@ from __future__ import annotations
 import os
 import sys
 
-if __name__ == "__main__" and "--hier" in sys.argv \
+if __name__ == "__main__" \
+        and any(f in sys.argv for f in ("--hier", "--hybrid")) \
         and "--xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", ""):
     # must be set before jax import (SNIPPETS.md idiom)
@@ -35,7 +36,8 @@ from jax.sharding import PartitionSpec as P
 from benchmarks import common
 from benchmarks.common import emit, time_fn
 from repro import compat
-from repro.core import collectives, hier, hw, planner
+from repro.configs import registry
+from repro.core import c2c, collectives, hier, hw, planner
 
 
 def run():
@@ -68,6 +70,27 @@ def run():
             axis_names={"data"}, check_vma=False)(v))
         us = time_fn(f, x)
         emit(f"collectives/{name}/n{1 << 18}", us, "local_1rank_path")
+
+    # executed-hybrid comm model: the C2C chooser's plan for the canonical
+    # smoke transformer on a (node=2, local=4) mesh, costed against pure
+    # (flat) DP on each topology. Pure analysis -- device-independent, hence
+    # a STABLE ledger metric the perf gate can fail on.
+    cfg = registry.get_smoke_config("yi-6b")
+    batch, seq = 8, 64
+    amesh = compat.abstract_mesh((2, 4), (hier.NODE_AXIS, hier.LOCAL_AXIS))
+    plan = planner.plan_hybrid(cfg, amesh, batch=batch, seq=seq)
+    specs = c2c.layers_from_model_config(cfg, seq)
+    for topo in (hw.CLOUD_10G, hw.HPC_OPA):
+        cm = planner.model_hybrid_comm(plan, specs, batch=batch,
+                                       nodes=plan.dp, topo=topo)
+        # the acceptance bar: executed hybrid strictly beats pure DP
+        assert cm.t_hybrid < cm.t_dp_flat, (topo.name, cm)
+        emit(f"collectives/hybrid_model/{topo.name}", 0.0,
+             f"exposed_dp_ms={cm.t_dp_flat*1e3:.3f};"
+             f"exposed_dp_hier_ms={cm.t_dp_hier*1e3:.3f};"
+             f"exposed_hybrid_ms={cm.t_hybrid*1e3:.3f};"
+             f"reduction_vs_dp_x={cm.reduction_vs_flat:.2f};"
+             f"model_layers={len(plan.model_layer_names)}")
 
 
 def run_hier():
@@ -119,11 +142,60 @@ def run_hier():
                  f"hier_ms={t_hier*1e3:.3f}")
 
 
+def run_hybrid():
+    """Measured hybrid vs pure-DP train steps on the ("node"=2, "local"=4)
+    mesh: the chooser's model-parallel layers execute tensor-parallel over
+    "local" while pure DP replicates everything. Wall-clock, so the metrics
+    are unstable; the gate-able modeled comparison lives in run()."""
+    n_dev = jax.device_count()
+    if n_dev < 8:
+        emit("collectives/hybrid/skipped", 0.0,
+             f"needs 8 virtual devices, have {n_dev}")
+        return
+    from repro.data import pipeline
+    from repro.launch import mesh as mesh_lib
+    from repro.models.transformer import Batch, Model
+    from repro.optim import optimizers as opt_lib
+    from repro.train import trainer as tr
+
+    cfg = registry.get_smoke_config("yi-6b")
+    batch, seq = 8, 32
+    mesh = mesh_lib.make_hier_mesh(2, 4)
+    model = Model(cfg)
+    optimizer = opt_lib.make_optimizer("adamw", 1e-3)
+    dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=seq,
+                               global_batch=batch, seed=0)
+    raw = next(iter(pipeline.iterate(dcfg, 1)))
+    b = Batch(tokens=jnp.asarray(raw["tokens"]),
+              labels=jnp.asarray(raw["labels"]))
+    results = {}
+    with compat.set_mesh(mesh):
+        for name, plnr in (
+            ("dp", planner.Planner(mesh=mesh)),
+            ("hybrid", planner.make_hybrid_planner(mesh, cfg, batch=batch,
+                                                   seq=seq)),
+        ):
+            comm = tr.CommConfig(mode="mlsl", hier=True)
+            state = tr.make_train_state(model, optimizer,
+                                        jax.random.PRNGKey(0))
+            step = jax.jit(tr.make_train_step(model, optimizer, mesh, plnr,
+                                              comm))
+            us = time_fn(step, state, b, iters=3, warmup=1)
+            results[name] = us
+            emit(f"collectives/hybrid_step/{name}", us,
+                 f"step_us={us:.0f}us", stable=False)
+    emit("collectives/hybrid_step/ratio", 0.0,
+         f"dp_over_hybrid={results['dp'] / max(results['hybrid'], 1e-9):.2f}x",
+         stable=False)
+
+
 def main():
     if "--hier" in sys.argv:
         # distinct artifact: the 8-virtual-device sweep measures a different
         # thing than the single-device run() and must not clobber its ledger
         common.run_with_ledger("bench_collectives_hier", run_hier)
+    elif "--hybrid" in sys.argv:
+        common.run_with_ledger("bench_collectives_hybrid", run_hybrid)
     else:
         common.run_with_ledger("bench_collectives", run)
 

@@ -236,6 +236,108 @@ def embed_layer(name: str, vocab: int, d_model: int, seq: int) -> LayerSpec:
                      flops_fwd_per_sample=0.0)
 
 
+# --- whole-model layer lists (the analysis→execution bridge) -----------------
+
+def block_layer(name: str, kind: str, cfg, seq: int,
+                repeats: int = 1) -> LayerSpec:
+    """One LayerSpec for a whole transformer block (mixer + MLP).
+
+    `cfg` is a repro.configs.base.ModelConfig; `kind` one of its block
+    kinds. out_elems_per_sample counts BOTH residual-stream outputs (the
+    mixer's and the MLP's) — i.e. the two activation psums an executed
+    head/feature-sharded block exchanges per forward pass. `repeats` scales
+    weights/activations/flops for stacked (scanned) pattern positions; the
+    C2C ratios are invariant to it (every term scales by the same factor)
+    but per-iteration comm totals need it.
+    """
+    d = cfg.d_model
+    mlp_part = None
+    if kind != "ssm" and kind != "moe":
+        mlp_part = mlp_layer(name, d, cfg.d_ff, seq, gated=cfg.mlp_gated)
+    if kind in ("attn", "local", "enc"):
+        a = cfg.attn
+        mix = attention_layer(name, d, a.n_heads, a.head_dim, a.n_kv, seq)
+        kindk = LayerKind.ATTENTION
+    elif kind == "cross":
+        # self-attention + cross-attention: two attention stacks' weights
+        a = cfg.attn
+        one = attention_layer(name, d, a.n_heads, a.head_dim, a.n_kv, seq)
+        mix = dataclasses.replace(
+            one, weight_elems=2.0 * one.weight_elems,
+            out_elems_per_sample=2.0 * one.out_elems_per_sample,
+            flops_fwd_per_sample=2.0 * one.flops_fwd_per_sample)
+        kindk = LayerKind.ATTENTION
+    elif kind == "mla":
+        m = cfg.mla
+        w = (d * m.q_lora_rank
+             + m.q_lora_rank * m.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+             + d * (m.kv_lora_rank + m.qk_rope_dim)
+             + m.kv_lora_rank * m.n_heads * (m.qk_nope_dim + m.v_head_dim)
+             + m.n_heads * m.v_head_dim * d)
+        score = 2.0 * 2.0 * seq * seq * m.n_heads \
+            * (m.qk_nope_dim + m.qk_rope_dim) * 0.5
+        mix = LayerSpec(name=name, kind=LayerKind.ATTENTION,
+                        weight_elems=float(w),
+                        out_elems_per_sample=float(seq * d),
+                        flops_fwd_per_sample=2.0 * seq * w + score)
+        kindk = LayerKind.ATTENTION
+    elif kind == "moe":
+        a = cfg.attn
+        attn = attention_layer(name, d, a.n_heads, a.head_dim, a.n_kv, seq)
+        m = cfg.moe
+        moe = moe_layer(name, d, m.d_ff, m.n_experts, m.top_k, seq,
+                        gated=cfg.mlp_gated)
+        mix = LayerSpec(
+            name=name, kind=LayerKind.MOE,
+            weight_elems=attn.weight_elems + moe.weight_elems,
+            out_elems_per_sample=attn.out_elems_per_sample
+            + moe.out_elems_per_sample,
+            flops_fwd_per_sample=attn.flops_fwd_per_sample
+            + moe.flops_fwd_per_sample)
+        kindk = LayerKind.MOE
+    elif kind == "ssm":
+        s = cfg.ssm
+        mix = ssm_layer(name, d, s.expand * d, s.d_state, seq)
+        kindk = LayerKind.SSM
+    elif kind == "rglru":
+        r = cfg.rglru
+        w = 2.0 * d * r.lru_width + r.lru_width * d + 3.0 * r.lru_width
+        mix = LayerSpec(name=name, kind=LayerKind.SSM,
+                        weight_elems=float(w),
+                        out_elems_per_sample=float(seq * d),
+                        flops_fwd_per_sample=2.0 * seq * w)
+        kindk = LayerKind.SSM
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    w = mix.weight_elems + (mlp_part.weight_elems if mlp_part else 0.0)
+    o = mix.out_elems_per_sample \
+        + (mlp_part.out_elems_per_sample if mlp_part else 0.0)
+    f = mix.flops_fwd_per_sample \
+        + (mlp_part.flops_fwd_per_sample if mlp_part else 0.0)
+    return LayerSpec(name=name, kind=kindk, weight_elems=w * repeats,
+                     out_elems_per_sample=o * repeats,
+                     flops_fwd_per_sample=f * repeats)
+
+
+def layers_from_model_config(cfg, seq: int) -> list[LayerSpec]:
+    """Per-layer LayerSpecs for a transformer ModelConfig, named after the
+    parameter-tree keys (`embed`, `p{i}_{kind}` stacked pattern positions,
+    `t{i}_{kind}` tail blocks, `head`) so per-layer strategy verdicts map
+    1:1 onto parameter subtrees — planner.plan_hybrid consumes this to turn
+    the chooser's table into an executed sharding."""
+    out = [embed_layer("embed", cfg.vocab, cfg.d_model, seq)]
+    reps = cfg.pattern_repeats
+    if reps > 0:
+        for i, kind in enumerate(cfg.block_pattern):
+            out.append(block_layer(f"p{i}_{kind}", kind, cfg, seq,
+                                   repeats=reps))
+    for i, kind in enumerate(cfg.tail_layers):
+        out.append(block_layer(f"t{i}_{kind}", kind, cfg, seq))
+    if not cfg.tie_embeddings:
+        out.append(fc_layer("head", cfg.d_model, cfg.vocab, seq))
+    return out
+
+
 # --- iteration-level summaries (used by simulator calibration) ---------------
 
 def exposed_comm_upper_bound(layers: Sequence[LayerSpec], batch: int, p: int,

@@ -180,6 +180,126 @@ def broadcast(x: jax.Array, axes, *, root: int = 0) -> jax.Array:
     return lax.psum(x * mask, ax)
 
 
+# --- activation exchange for tensor/model parallelism (hybrid execution) -----
+#
+# The Megatron-style conjugate operator pair: a model-sharded block wraps its
+# projections as
+#
+#     y = tp_psum(h @ W_out_shard, axis)   where   h = act(tp_replicate(x,
+#     axis) @ W_in_shard)
+#
+# `tp_replicate` (the "f" operator) is identity in the forward pass and psums
+# the cotangent in the backward pass — the residual stream enters replicated
+# and its gradient must re-synchronize after each rank back-propagated only
+# through its own head/feature shard. `tp_psum` ("g") is the conjugate: psum
+# forward (the out-projection computes a partial sum over the sharded
+# contraction dim), identity backward (the incoming cotangent is already
+# replicated). Together they keep every residual-stream activation AND its
+# gradient replicated across the model group while weights stay sharded.
+#
+# Both directions are written out explicitly via custom_vjp: inside the
+# fully-manual shard_map regions this repo uses (check_vma=False, JAX
+# 0.4.30+), the built-in transpose of a bare lax.psum does NOT produce the
+# replicated-input gradient this pattern needs (tests/test_hybrid.py pins
+# the correct values against a dense single-rank reference).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_replicate(x: jax.Array, axes) -> jax.Array:
+    """f operator: identity forward; backward psums the cotangent over `axes`.
+
+    Place on a replicated activation entering model-sharded projections."""
+    del axes
+    return x
+
+
+def _tp_replicate_fwd(x, axes):
+    del axes
+    return x, None
+
+
+def _tp_replicate_bwd(axes, _, ct):
+    return (lax.psum(ct, _axes_tuple(axes)),)
+
+
+tp_replicate.defvjp(_tp_replicate_fwd, _tp_replicate_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_psum(x: jax.Array, axes) -> jax.Array:
+    """g operator: psum forward (combine per-shard partial sums); identity
+    backward (the cotangent arrives replicated across the model group)."""
+    return lax.psum(x, _axes_tuple(axes))
+
+
+def _tp_psum_fwd(x, axes):
+    return lax.psum(x, _axes_tuple(axes)), None
+
+
+def _tp_psum_bwd(axes, _, ct):
+    del axes
+    return (ct,)
+
+
+tp_psum.defvjp(_tp_psum_fwd, _tp_psum_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_psum_scatter(x: jax.Array, axes) -> jax.Array:
+    """g operator in the bandwidth-optimal psum_scatter + all_gather form.
+
+    Numerically identical to `tp_psum` but decomposed the way a ring
+    allreduce is: each rank combines 1/g of the trailing feature dim, then
+    the shards are gathered back. Requires the trailing dim to divide by the
+    group size."""
+    return _psum_scatter_gather(x, _axes_tuple(axes))
+
+
+def _psum_scatter_gather(x, ax):
+    dim = x.ndim - 1
+    y = x
+    for a in ax:
+        y = lax.psum_scatter(y, a, scatter_dimension=dim, tiled=True)
+    for a in reversed(ax):
+        y = lax.all_gather(y, a, axis=dim, tiled=True)
+    return y
+
+
+def _tp_psum_scatter_fwd(x, axes):
+    return _psum_scatter_gather(x, _axes_tuple(axes)), None
+
+
+def _tp_psum_scatter_bwd(axes, _, ct):
+    del axes
+    return (ct,)
+
+
+tp_psum_scatter.defvjp(_tp_psum_scatter_fwd, _tp_psum_scatter_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class TPComm:
+    """Activation-exchange communicator for one model-parallel mesh axis.
+
+    The CommEngine hands this out (``engine.tp``) when its plan carries a
+    tensor-parallel axis, so model code and the gradient-bucket path share
+    one comm surface; the f/g ops are also callable directly
+    (`tp_replicate` / `tp_psum`)."""
+
+    axis: str
+
+    def replicate(self, x: jax.Array) -> jax.Array:
+        return tp_replicate(x, self.axis)
+
+    def psum(self, x: jax.Array, *, scatter: bool = False) -> jax.Array:
+        if scatter:
+            return tp_psum_scatter(x, self.axis)
+        return tp_psum(x, self.axis)
+
+    @property
+    def size(self) -> int:
+        return axis_size(self.axis)
+
+
 @dataclasses.dataclass(frozen=True)
 class Comm:
     """A communicator bound to a mesh + manual axes (MLSL 'distribution').

@@ -98,6 +98,18 @@ class EnginePlan:
     overlap: bool
     accum_steps: int
     skip_reduce: bool = False
+    # hybrid (data x model) execution: gradients of model-sharded parameters
+    # reduce over the data axes only (each rank owns a distinct 1/tp shard),
+    # while replicated-parameter gradients reduce over data axes + tp_axis
+    # (their per-rank copies are identical, so the mean is unchanged and the
+    # two-level path gets the intra link back). bucket_axes records the
+    # reduce axes per bucket; () means "use data_axes for every bucket".
+    tp_axis: Optional[str] = None
+    tp: int = 1
+    bucket_axes: tuple = ()
+
+    def axes_for(self, bi: int) -> tuple:
+        return self.bucket_axes[bi] if self.bucket_axes else self.data_axes
 
     @property
     def n_buckets(self) -> int:
@@ -110,7 +122,9 @@ class EnginePlan:
 def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
                layer_index: Callable[[tuple], float] | None = None,
                group_key: Callable[[tuple], object] | None = None,
-               leaf_replicated: Callable[[tuple], bool] | None = None
+               leaf_replicated: Callable[[tuple], bool] | None = None,
+               tp_axis: Optional[str] = None,
+               leaf_sharded: Callable[[tuple], bool] | None = None
                ) -> EnginePlan:
     """Compile CommConfig + gradient structure + mesh into an EnginePlan.
 
@@ -119,6 +133,16 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
     fuse across; `leaf_replicated(path)` says whether a leaf is fully
     replicated over the auto axes (only such buckets may travel as one flat
     message — flattening a model-sharded gradient would reshard it).
+
+    `tp_axis` + `leaf_sharded` switch on hybrid (data x model) execution:
+    the engine then runs inside a manual region over data_axes + tp_axis,
+    `grad_struct` describes each rank's LOCAL gradient shards, and
+    `leaf_sharded(path)` marks leaves whose parameter is model-sharded over
+    `tp_axis`. Sharded buckets reduce over the data axes only; replicated
+    buckets reduce over data axes + tp_axis (identical per-rank copies, so
+    the mean is unchanged and the hierarchical route stays available). In
+    this fully-manual region every leaf is a local array, so all buckets may
+    travel fused.
     """
     if layer_index is None:
         layer_index = scheduler.default_layer_index
@@ -139,14 +163,36 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
         dp *= mesh.shape[a]
     use_ef = comm.error_feedback and comm.wire == cl.WIRE_INT8
 
+    tp = 1
+    bucket_axes = ()
+    sharded_buckets = tuple(False for _ in plan.buckets)
+    if tp_axis is not None:
+        if leaf_sharded is None:
+            raise ValueError("tp_axis requires a leaf_sharded predicate")
+        if use_ef:
+            raise ValueError(
+                "error feedback is unsupported with hybrid tensor "
+                "parallelism: the int8 residual is a per-rank fabric shard, "
+                "but model-sharded gradients reduce over the node axis only "
+                "while replicated ones reduce over (node, local)")
+        tp = int(mesh.shape[tp_axis])
+        sharded_buckets = tuple(
+            any(leaf_sharded(leaf_paths[i]) for i in b.leaf_ids)
+            for b in plan.buckets)
+        full = tuple(data_axes) + (tp_axis,)
+        bucket_axes = tuple(tuple(data_axes) if sh else full
+                            for sh in sharded_buckets)
+        fusable = tuple(True for _ in plan.buckets)
+
     hier_spec = None
     n_node, n_local = 1, dp
     if comm.hier:
-        assert hier_lib.NODE_AXIS in data_axes and \
-            hier_lib.LOCAL_AXIS in data_axes, (
+        hier_axes = tuple(data_axes) + ((tp_axis,) if tp_axis else ())
+        assert hier_lib.NODE_AXIS in hier_axes and \
+            hier_lib.LOCAL_AXIS in hier_axes, (
                 "comm.hier needs the data dimension factored over "
                 f"({hier_lib.NODE_AXIS!r}, {hier_lib.LOCAL_AXIS!r}) mesh "
-                f"axes (launch.mesh.make_hier_mesh); got {data_axes}")
+                f"axes (launch.mesh.make_hier_mesh); got {hier_axes}")
         wire_intra = comm.wire_intra or hier_lib.default_wire_intra(comm.wire)
         hier_spec = hier_lib.HierSpec(wire_intra=wire_intra,
                                       wire_inter=comm.wire,
@@ -165,6 +211,12 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
                                             nodes=n_node)
         else:
             algos = tuple(planner_lib.ALGO_HIER for _ in plan.buckets)
+        if tp_axis is not None:
+            # the two-level path needs BOTH hierarchy axes in a bucket's
+            # reduce axes; model-sharded buckets reduce over the node axis
+            # only, so they always go flat
+            algos = tuple(planner_lib.ALGO_FLAT if sh else a
+                          for a, sh in zip(algos, sharded_buckets))
     else:
         algos = tuple(planner_lib.ALGO_FLAT for _ in plan.buckets)
 
@@ -173,7 +225,8 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
                       prioritize=comm.prioritize, use_ef=use_ef,
                       hier_spec=hier_spec, n_node=n_node, n_local=n_local,
                       overlap=comm.overlap, accum_steps=comm.accum_steps,
-                      skip_reduce=comm.skip_reduce)
+                      skip_reduce=comm.skip_reduce, tp_axis=tp_axis, tp=tp,
+                      bucket_axes=bucket_axes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +239,17 @@ class CommEngine:
     def create(cls, grad_struct, comm: CommConfig, mesh, data_axes,
                **kw) -> "CommEngine":
         return cls(plan=build_plan(grad_struct, comm, mesh, data_axes, **kw))
+
+    @property
+    def tp(self) -> Optional[cl.TPComm]:
+        """Activation-exchange communicator for the plan's model axis (None
+        on pure-DP plans): the f/g operator pair model-parallel layers place
+        around their sharded projections (collectives.tp_replicate /
+        tp_psum), handed out here so the activation flow and the gradient-
+        bucket flow share one comm surface."""
+        if self.plan.tp_axis is None:
+            return None
+        return cl.TPComm(self.plan.tp_axis)
 
     # -- residual (error-feedback) state -----------------------------------
 
@@ -240,7 +304,8 @@ class CommEngine:
             return hier_lib.hier_allreduce(flat, p.hier_spec, mean=True), None
         if p.use_ef:
             return cl.allreduce_ef(flat, residual, p.data_axes, mean=True)
-        return cl.allreduce(flat, p.data_axes, wire=p.wire, mean=True), None
+        return cl.allreduce(flat, p.axes_for(bi), wire=p.wire,
+                            mean=True), None
 
     def reduce_chained(self, grads, residuals, token):
         """Fused, prioritized, wire-precision gradient exchange, continuing
@@ -285,7 +350,7 @@ class CommEngine:
                 if p.prioritize:
                     vals, token = scheduler.chain_barrier(vals, token)
                 wire = p.wire if p.wire != cl.WIRE_INT8 else cl.WIRE_BF16
-                vals = [cl.allreduce(v, p.data_axes, wire=wire, mean=True)
+                vals = [cl.allreduce(v, p.axes_for(bi), wire=wire, mean=True)
                         for v in vals]
                 if p.use_ef:
                     new_residuals.append(residuals[bi])

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.checkpoint import ckpt
 from repro.configs import registry
-from repro.core.planner import Planner
+from repro.core import planner as pl
 from repro.data import pipeline
 from repro.launch import mesh as mesh_lib
 from repro.models.transformer import Batch, Model
@@ -50,6 +50,11 @@ def main():
     # two-level collectives over a ("node", "local") factored mesh; needs
     # node*local devices (or XLA_FLAGS=--xla_force_host_platform_device_count)
     ap.add_argument("--hier", action="store_true")
+    # execute the C2C chooser's hybrid plan: tensor parallelism over the
+    # "local" mesh axis for the layers the chooser sends model-parallel,
+    # data parallelism across "node" (implies the hier mesh; needs --comm
+    # mlsl)
+    ap.add_argument("--hybrid", action="store_true")
     ap.add_argument("--nodes", type=int, default=2)
     ap.add_argument("--local", type=int, default=4)
     ap.add_argument("--wire-intra", default=None,
@@ -71,19 +76,34 @@ def main():
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
            else registry.get_config(args.arch))
     model = Model(cfg)
-    if args.hier:
+    if args.hybrid:
+        if args.comm != "mlsl":
+            raise SystemExit("--hybrid needs --comm mlsl (the activation "
+                             "f/g collectives run in the explicit data path)")
+        mesh = mesh_lib.make_hier_mesh(args.nodes, args.local)
+        planner = pl.make_hybrid_planner(mesh, cfg, batch=args.batch,
+                                         seq=args.seq)
+        for lp in planner.hybrid.layers:
+            note = f" [{lp.reason}]" if lp.reason else ""
+            print(f"plan {lp.name:12s} {lp.kind:6s} "
+                  f"chooser={lp.choice.strategy.value}"
+                  f"(g={lp.choice.group_size}) "
+                  f"executed={lp.executed}{note}")
+    elif args.hier:
         mesh = mesh_lib.make_hier_mesh(args.nodes, args.local,
                                        args.model_parallel)
+        planner = pl.Planner(mesh=mesh)
     else:
         mesh = mesh_lib.make_host_mesh(args.data_parallel,
                                        args.model_parallel)
-    planner = Planner(mesh=mesh)
+        planner = pl.Planner(mesh=mesh)
     lr = schedules.warmup_cosine(args.lr, max(args.steps // 10, 1), args.steps)
     optimizer = opt_lib.make_optimizer(args.optimizer, lr)
     comm = tr.CommConfig(mode=args.comm, wire=args.wire,
                          prioritize=not args.no_prioritize,
                          error_feedback=args.error_feedback,
-                         hier=args.hier, wire_intra=args.wire_intra,
+                         hier=args.hier or args.hybrid,
+                         wire_intra=args.wire_intra,
                          topo=args.topo, accum_steps=args.microbatches,
                          overlap=args.overlap)
     dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=args.seq,

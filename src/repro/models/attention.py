@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AttnConfig, MLAConfig
+from repro.core import collectives as cl
 from repro.core import planner as pl
 from repro.models import common
 
@@ -120,12 +121,24 @@ def chunked_sdpa(q, k, v, *, causal: bool = True, window: int | None = None,
 
 def gqa_apply(p: dict, x: jax.Array, a: AttnConfig, *, pos0: int = 0,
               window: int | None = None, mask: jax.Array | None = None,
-              kv_override=None, kv_chunk: int | None = None) -> jax.Array:
+              kv_override=None, kv_chunk: int | None = None,
+              tp_axis: str | None = None) -> jax.Array:
     """Full forward over a sequence (training / prefill / encoder).
 
-    kv_override: (k, v) for cross-attention (whisper decoder)."""
+    kv_override: (k, v) for cross-attention (whisper decoder).
+
+    tp_axis: head-sharded tensor parallelism — the projections in `p` are
+    this rank's head shard (local head counts derived from the shard
+    shapes), x enters through the f operator (identity fwd / psum bwd) and
+    the out-projection's partial sum leaves through g (psum fwd / identity
+    bwd): repro.core.collectives.tp_replicate / tp_psum. Rope and softmax
+    are per-head, so the sharded math is exact."""
     B, S, _ = x.shape
     H, KV, hd = a.n_heads, a.n_kv, a.head_dim
+    if tp_axis is not None:
+        H = p["wq"].shape[-1] // hd
+        KV = p["wk"].shape[-1] // hd
+        x = cl.tp_replicate(x, tp_axis)
     q = _split_heads(x @ p["wq"], H, hd)
     if kv_override is None:
         k = _split_heads(x @ p["wk"], KV, hd)
@@ -148,7 +161,10 @@ def gqa_apply(p: dict, x: jax.Array, a: AttnConfig, *, pos0: int = 0,
                          kv_chunk=kv_chunk)
     else:
         o = _sdpa(q, k, v, mask)
-    return o.reshape(B, S, H * hd) @ p["wo"]
+    y = o.reshape(B, S, H * hd) @ p["wo"]
+    if tp_axis is not None:
+        y = cl.tp_psum(y, tp_axis)
+    return y
 
 
 def gqa_cross_kv(p: dict, enc: jax.Array, a: AttnConfig):

@@ -95,6 +95,23 @@ class BlockCtx:
     # python-unroll the block scan: required inside partial-manual shard_map
     # regions on JAX 0.4.x (compat.PARTIAL_MANUAL_SCAN_OK)
     unroll: bool = False
+    # hybrid execution: activation-exchange axis for tensor-parallel blocks.
+    # Whether a given block actually runs sharded is detected from its shard
+    # shapes (attn_tp / mlp_tp) — the per-layer hybrid plan leaves fallback
+    # layers replicated, and putting f/g psums around full-size weights
+    # would multiply their output by the group size.
+    tp_axis: Any = None
+
+    def attn_tp(self, p_attn: dict, a) -> Any:
+        if self.tp_axis is None:
+            return None
+        sharded = p_attn["wo"].shape[-2] != a.n_heads * a.head_dim
+        return self.tp_axis if sharded else None
+
+    def mlp_tp(self, p_mlp: dict) -> Any:
+        if self.tp_axis is None:
+            return None
+        return self.tp_axis if p_mlp["w2"].shape[-2] != self.cfg.d_ff else None
 
     def window_for(self, kind: str):
         a = self.cfg.attn
@@ -119,7 +136,8 @@ def block_apply(kind: str, p: dict, h: jax.Array, ctx: BlockCtx):
         causal = kind != "enc"
         a = cfg.attn if causal else dataclasses.replace(cfg.attn, causal=False)
         h = h + attn_mod.gqa_apply(p["attn"], x, a, window=w,
-                                   kv_chunk=ctx.kv_chunk)
+                                   kv_chunk=ctx.kv_chunk,
+                                   tp_axis=ctx.attn_tp(p["attn"], a))
         x = norm_apply(p["ln2"], h, cfg)
         if kind == "moe":
             if ctx.moe_impl == "ep":
@@ -131,7 +149,8 @@ def block_apply(kind: str, p: dict, h: jax.Array, ctx: BlockCtx):
             else:
                 y, aux = moe.moe_apply(p["moe"], x, cfg.moe, act=cfg.mlp_act)
         else:
-            y = mlp.mlp_apply(p["mlp"], x, act=cfg.mlp_act, gated=cfg.mlp_gated)
+            y = mlp.mlp_apply(p["mlp"], x, act=cfg.mlp_act, gated=cfg.mlp_gated,
+                              tp_axis=ctx.mlp_tp(p["mlp"]))
         return h + y, aux
     if kind == "mla":
         x = norm_apply(p["ln1"], h, cfg)
@@ -140,7 +159,8 @@ def block_apply(kind: str, p: dict, h: jax.Array, ctx: BlockCtx):
                                    kv_chunk=ctx.kv_chunk)
         x = norm_apply(p["ln2"], h, cfg)
         return h + mlp.mlp_apply(p["mlp"], x, act=cfg.mlp_act,
-                                 gated=cfg.mlp_gated), aux
+                                 gated=cfg.mlp_gated,
+                                 tp_axis=ctx.mlp_tp(p["mlp"])), aux
     if kind == "ssm":
         x = norm_apply(p["ln1"], h, cfg)
         return h + ssm.ssm_apply(p["ssm"], x, cfg.ssm), aux
@@ -149,7 +169,8 @@ def block_apply(kind: str, p: dict, h: jax.Array, ctx: BlockCtx):
         h = h + rglru.rglru_apply(p["rec"], x, cfg.rglru)
         x = norm_apply(p["ln2"], h, cfg)
         return h + mlp.mlp_apply(p["mlp"], x, act=cfg.mlp_act,
-                                 gated=cfg.mlp_gated), aux
+                                 gated=cfg.mlp_gated,
+                                 tp_axis=ctx.mlp_tp(p["mlp"])), aux
     if kind == "cross":
         x = norm_apply(p["ln1"], h, cfg)
         h = h + attn_mod.gqa_apply(p["attn"], x, cfg.attn,

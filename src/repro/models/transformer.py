@@ -114,13 +114,15 @@ class Model:
     def _ctx(self, enc_out=None, window_override=None, moe_impl="gather",
              kv_chunk=None, kv_dtype="native", mesh=None,
              batch_axes=("data",), fsdp_axes=(),
-             wgather_wire="bf16", unroll=False) -> blocks.BlockCtx:
+             wgather_wire="bf16", unroll=False,
+             tp_axis=None) -> blocks.BlockCtx:
         return blocks.BlockCtx(cfg=self.cfg, window_override=window_override,
                                enc_out=enc_out, moe_impl=moe_impl,
                                kv_chunk=kv_chunk, kv_dtype=kv_dtype,
                                mesh=mesh, batch_axes=batch_axes,
                                fsdp_axes=fsdp_axes,
-                               wgather_wire=wgather_wire, unroll=unroll)
+                               wgather_wire=wgather_wire, unroll=unroll,
+                               tp_axis=tp_axis)
 
     def _embed(self, params: dict, batch: Batch, *, pos0: int = 0) -> jax.Array:
         cfg = self.cfg

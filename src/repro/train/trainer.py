@@ -124,10 +124,34 @@ def make_comm_engine(model: Model, mesh: Mesh, planner: Planner,
         spec = spec_by_path.get(jax.tree_util.keystr(path), P())
         return all(a is None for a in spec)
 
-    return CommEngine.create(grad_struct, comm, mesh, planner.batch_axes,
+    hybrid = planner.hybrid
+    if hybrid is None:
+        return CommEngine.create(grad_struct, comm, mesh, planner.batch_axes,
+                                 layer_index=_layer_index_fn(),
+                                 group_key=group_key,
+                                 leaf_replicated=leaf_replicated)
+
+    # Hybrid execution: the engine runs inside a manual region over
+    # data_axes + tp_axis, so it plans on what each rank actually reduces —
+    # model-sharded leaves shrink to their local 1/tp shard.
+    def leaf_sharded(path):
+        return not leaf_replicated(path)
+
+    def shard_struct(path, leaf):
+        spec = spec_by_path.get(jax.tree_util.keystr(path), P())
+        shape = list(leaf.shape)
+        for d, ax in enumerate(spec):
+            if ax == hybrid.tp_axis:
+                shape[d] //= hybrid.tp
+        return jax.ShapeDtypeStruct(tuple(shape), leaf.dtype)
+
+    local_struct = jax.tree_util.tree_map_with_path(shard_struct, grad_struct)
+    return CommEngine.create(local_struct, comm, mesh, hybrid.data_axes,
                              layer_index=_layer_index_fn(),
                              group_key=group_key,
-                             leaf_replicated=leaf_replicated)
+                             leaf_replicated=leaf_replicated,
+                             tp_axis=hybrid.tp_axis,
+                             leaf_sharded=leaf_sharded)
 
 
 def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
@@ -142,13 +166,28 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
                          "data path; gspmd reductions are partitioner-"
                          "inserted and cannot be pipelined from here")
 
-    # mlsl mode runs the step in a shard_map manual over the batch axes; if
-    # any OTHER mesh axis is >1 the region is PARTIAL-manual, which on JAX
-    # 0.4.x cannot contain scan loops (compat.PARTIAL_MANUAL_SCAN_OK) --
-    # unroll the block/accum scans there (pattern_repeats is small for the
-    # smoke configs this CPU path runs; mesh-scale dry-runs use gspmd).
+    # Hybrid (data x model) execution: the step goes manual over the batch
+    # axes AND the tp axis; parameters/optimizer state enter as local shards
+    # per the planner's per-layer specs, model-sharded layers exchange
+    # activations through the f/g collectives, and the engine splits the
+    # gradient reduction (sharded leaves over data axes only).
+    hybrid = planner.hybrid
+    tp_axis = hybrid.tp_axis if hybrid is not None else None
+    if hybrid is not None and comm.mode != "mlsl":
+        raise ValueError("hybrid execution (planner.hybrid) needs comm mode "
+                         "'mlsl': the activation f/g collectives and the "
+                         "split gradient reduction run inside the explicit "
+                         "manual data path")
+
+    # mlsl mode runs the step in a shard_map manual over the batch axes (plus
+    # the tp axis under hybrid); if any OTHER mesh axis is >1 the region is
+    # PARTIAL-manual, which on JAX 0.4.x cannot contain scan loops
+    # (compat.PARTIAL_MANUAL_SCAN_OK) -- unroll the block/accum scans there
+    # (pattern_repeats is small for the smoke configs this CPU path runs;
+    # mesh-scale dry-runs use gspmd).
+    manual_axes = tuple(data_axes) + ((tp_axis,) if tp_axis else ())
     partial_manual = any(mesh.shape[a] > 1 for a in mesh.axis_names
-                         if a not in data_axes)
+                         if a not in manual_axes)
     unroll_scans = (comm.mode == "mlsl" and partial_manual
                     and not compat.PARTIAL_MANUAL_SCAN_OK)
 
@@ -160,6 +199,11 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
         loss_kw["kv_chunk"] = comm.kv_chunk
     if unroll_scans:
         loss_kw["unroll"] = True
+    if tp_axis is not None:
+        # blocks detect model-sharded weights by their shard shapes and
+        # place the f/g activation collectives; DP-fallback layers see
+        # full-size (replicated) weights and ignore the axis
+        loss_kw["tp_axis"] = tp_axis
 
     def loss_fn(params, batch: Batch):
         return model.loss(params, batch, **loss_kw)
@@ -226,6 +270,35 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
     # flat-vs-two-level routing, wire precision, error feedback, priority
     # chain.
     engine = make_comm_engine(model, mesh, planner, comm)
+
+    if tp_axis is None:
+        pspecs = None
+        clip_grads = opt_lib.clip_by_global_norm
+    else:
+        pspecs = planner.tree_specs(model.param_defs(),
+                                    stacked_paths=Model.stacked_path)
+        sharded_flags = [any(ax == tp_axis for ax in s)
+                         for s in jax.tree_util.tree_leaves(
+                             pspecs, is_leaf=lambda x: isinstance(x, P))]
+
+        def clip_grads(grads, max_norm):
+            """opt_lib.clip_by_global_norm with the model-sharded leaves'
+            sum-of-squares psum'd over the tp axis (each rank holds a
+            distinct shard; replicated leaves are counted once). The norm
+            comes out replicated everywhere, so replicated parameters keep
+            taking identical updates across the tp group."""
+            leaves = jax.tree_util.tree_leaves(grads)
+            z = jnp.zeros((), jnp.float32)
+            sq_sh = sum((jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g, sh in zip(leaves, sharded_flags) if sh), z)
+            sq_rep = sum((jnp.sum(g.astype(jnp.float32) ** 2)
+                          for g, sh in zip(leaves, sharded_flags) if not sh),
+                         z)
+            gn = jnp.sqrt(sq_rep + jax.lax.psum(sq_sh, tp_axis))
+            scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+            return jax.tree_util.tree_map(
+                lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                grads), gn
 
     def _to_f32(tree):
         return jax.tree_util.tree_map(
@@ -321,14 +394,19 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
         else:
             loss, grads = grads_fn(params, batch)
             grads, residuals = engine.reduce(grads, residuals)
-        grads, gnorm = opt_lib.clip_by_global_norm(grads, grad_clip)
+        grads, gnorm = clip_grads(grads, grad_clip)
         loss = jax.lax.pmean(loss, data_axes)
         params, opt_state = optimizer.update(grads, opt_state, params, step)
         return params, opt_state, residuals, loss, gnorm
 
     grad_treedef = engine.plan.buckets.treedef
-    params_specs = jax.tree_util.tree_unflatten(
-        grad_treedef, [replicated] * grad_treedef.num_leaves)
+    if tp_axis is None:
+        params_specs = jax.tree_util.tree_unflatten(
+            grad_treedef, [replicated] * grad_treedef.num_leaves)
+    else:
+        # per-layer hybrid sharding: model-parallel layers' weights enter as
+        # local shards over tp_axis, everything else replicated
+        params_specs = pspecs
     batch_in_specs = Batch(tokens=P(bspec), labels=P(bspec), mask=None,
                            img_embeds=P(bspec) if cfg.vlm_img_tokens else None,
                            frame_embeds=P(bspec) if cfg.encoder is not None
@@ -336,9 +414,13 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
     res_spec = engine.residual_specs(P(bspec))
 
     def train_step(state: TrainState, batch: Batch):
-        opt_specs = jax.tree_util.tree_map(lambda _: replicated,
-                                           state.opt_state,
-                                           is_leaf=lambda x: x is None)
+        if tp_axis is None:
+            opt_specs = jax.tree_util.tree_map(lambda _: replicated,
+                                               state.opt_state,
+                                               is_leaf=lambda x: x is None)
+        else:
+            # all in-tree optimizers keep {name: params-shaped tree} states
+            opt_specs = {k: params_specs for k in state.opt_state}
         residuals = state.comm_residuals
         if engine.plan.use_ef and residuals is None:
             residuals = engine.init_residuals()
@@ -349,7 +431,7 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
                       batch_in_specs),
             out_specs=(params_specs, opt_specs, res_spec, replicated,
                        replicated),
-            axis_names=set(data_axes), check_vma=False,
+            axis_names=set(manual_axes), check_vma=False,
         )(state.params, state.opt_state, state.step, residuals, batch)
         params, opt_state, residuals, loss, gnorm = out
         new = TrainState(params=params, opt_state=opt_state,
