@@ -69,24 +69,68 @@ def _pad_flat(flat: jax.Array, quantum: int) -> jax.Array:
 
 
 def allreduce(x: jax.Array, axes, *, wire: str = WIRE_FP32,
-              mean: bool = False) -> jax.Array:
-    """Allreduce with a selectable wire precision. Shape-preserving."""
+              mean: bool = False, backend: str = "auto", fused: bool = True,
+              acc: jax.Array | None = None) -> jax.Array:
+    """Allreduce with a selectable wire precision. Shape-preserving.
+
+    `backend` selects the quantization kernels for the int8 wire and flows
+    from the single kernels/ops.py policy (`kops.wire_backend`; the
+    CommEngine resolves it once and records it in the EnginePlan). `fused`
+    runs the single-pass kernels (set False only to measure the composed
+    data path). `acc` (same shape as x, f32) fuses the gather-side
+    accumulate: the reduced message is added into `acc` and the sum
+    returned -- on the int8 wire via `dequantize_accumulate` so the gathered
+    message is consumed in one pass.
+    """
     ax = _axes_tuple(axes)
     p = axis_size(ax)
+    if wire == WIRE_INT8:
+        return _allreduce_int8(x, ax, mean=mean, backend=backend,
+                               fused=fused, acc=acc)
     if wire == WIRE_FP32:
         out = lax.psum(x, ax)
     elif wire == WIRE_BF16:
         out = lax.psum(x.astype(jnp.bfloat16), ax).astype(x.dtype)
-    elif wire == WIRE_INT8:
-        out = _allreduce_int8(x, ax)
     else:
         raise ValueError(wire)
     if mean:
         out = out / p
+    if acc is not None:
+        out = acc.reshape(x.shape) + out
     return out
 
 
-def _allreduce_int8(x: jax.Array, ax: tuple) -> jax.Array:
+def _gather_quantized(q: jax.Array, s: jax.Array, ax: tuple):
+    for a in reversed(ax):         # gather back in reverse scatter order
+        q = lax.all_gather(q, a, axis=0, tiled=True)
+        s = lax.all_gather(s, a, axis=0, tiled=True)
+    return q, s
+
+
+def _dequant_full(q, s, meta, n_full: int, *, size: int, shape, out_dtype,
+                  mean_div: int, backend: str, acc):
+    """Gather-side dequantize of the full (gathered) message.
+
+    The mean is folded into the per-block scale vector (n/QUANT_BLOCK
+    elements) instead of dividing the full-size dequantized message -- one
+    full HBM pass saved. With `acc`, the dequantize accumulates directly
+    into the f32 accumulator (quant8.dequantize_accumulate_blocks), so the
+    gathered int8 message is read once and the sum written once."""
+    if mean_div > 1:
+        s = s / mean_div
+    full_meta = dataclasses.replace(meta, shape=(n_full,), n=n_full,
+                                    dtype=jnp.float32)
+    if acc is not None:
+        out = kops.dequantize_accumulate(q, s, acc.reshape(-1), full_meta,
+                                         backend=backend)
+        return out[:size].reshape(shape)          # stays f32 (acc's dtype)
+    deq = kops.dequantize(q, s, full_meta, backend=backend)
+    return deq[:size].reshape(shape).astype(out_dtype)
+
+
+def _allreduce_int8(x: jax.Array, ax: tuple, *, mean: bool = False,
+                    backend: str = "auto", fused: bool = True,
+                    acc: jax.Array | None = None) -> jax.Array:
     """reduce_scatter(bf16) + quantize + all_gather(int8) + dequantize."""
     orig_dtype = x.dtype
     flat = x.reshape(-1).astype(jnp.bfloat16)
@@ -97,25 +141,36 @@ def _allreduce_int8(x: jax.Array, ax: tuple) -> jax.Array:
     shard = flat
     for a in ax:                   # sequential scatter over each axis
         shard = lax.psum_scatter(shard, a, scatter_dimension=0, tiled=True)
-    q, s, meta = kops.quantize(shard.astype(jnp.float32), block=QUANT_BLOCK,
-                               backend="jnp")
-    for a in reversed(ax):         # gather back in reverse order
-        q = lax.all_gather(q, a, axis=0, tiled=True)
-        s = lax.all_gather(s, a, axis=0, tiled=True)
-    full_meta = dataclasses.replace(meta, shape=(flat.shape[0],),
-                                    n=flat.shape[0], dtype=jnp.float32)
-    deq = kops.dequantize(q, s, full_meta, backend="jnp")
-    return deq[: x.size].reshape(x.shape).astype(orig_dtype)
+    if fused:
+        # wire cast folded into the quantize tile: the bf16 shard is
+        # consumed directly, no materialized f32 copy
+        q, s, meta = kops.quantize(shard, block=QUANT_BLOCK, backend=backend)
+    else:
+        q, s, meta = kops.quantize(shard.astype(jnp.float32),
+                                   block=QUANT_BLOCK, backend=backend)
+    q, s = _gather_quantized(q, s, ax)
+    return _dequant_full(q, s, meta, flat.shape[0], size=x.size,
+                         shape=x.shape, out_dtype=orig_dtype,
+                         mean_div=p if mean else 1, backend=backend, acc=acc)
 
 
 def allreduce_ef(x: jax.Array, residual: jax.Array, axes, *,
-                 mean: bool = False):
+                 mean: bool = False, backend: str = "auto",
+                 fused: bool = True, acc: jax.Array | None = None):
     """int8 allreduce with error feedback.
 
     `residual` has the shape of this rank's reduce-scatter shard (see
     `ef_residual_shape`); the quantization error of the local shard is
     carried into the next call, making the compression unbiased over time
     (1-bit-SGD / DGC style -- paper refs [5,13,16]).
+
+    The fabric leg reads and writes the gradient shard exactly once per
+    direction: quantize-side, `kops.quantize_ef` consumes the bf16 wire
+    shard and the f32 residual in one pass (cast + error-feedback add +
+    quantize + residual update fused); gather-side, the mean folds into the
+    scale vector and `acc` accumulates through `dequantize_accumulate`.
+    `fused=False` runs the composed passes (same kernels, separate trips) --
+    bit-identical at fp32, kept for the fused-vs-unfused tests/benchmarks.
     Returns (reduced, new_residual).
     """
     orig_dtype = x.dtype
@@ -127,18 +182,22 @@ def allreduce_ef(x: jax.Array, residual: jax.Array, axes, *,
     shard = flat
     for a in ax:
         shard = lax.psum_scatter(shard, a, scatter_dimension=0, tiled=True)
-    shard = shard.astype(jnp.float32) + residual
-    q, s, meta = kops.quantize(shard, block=QUANT_BLOCK, backend="jnp")
-    new_residual = shard - kops.dequantize(q, s, meta, backend="jnp")
-    for a in reversed(ax):
-        q = lax.all_gather(q, a, axis=0, tiled=True)
-        s = lax.all_gather(s, a, axis=0, tiled=True)
-    full_meta = dataclasses.replace(meta, shape=(flat.shape[0],),
-                                    n=flat.shape[0], dtype=jnp.float32)
-    deq = kops.dequantize(q, s, full_meta, backend="jnp")
-    out = deq[: x.size].reshape(x.shape).astype(orig_dtype)
-    if mean:
-        out = out / p
+    if fused:
+        q, s, meta, new_residual = kops.quantize_ef(
+            shard, residual, block=QUANT_BLOCK, backend=backend)
+    else:
+        # composed reference path: separate cast/add, quantize, and
+        # residual-update trips; the residual still routes through the
+        # fused dequantize_accumulate kernel (y + q * (-s) == y - q * s
+        # bitwise), so both paths agree bit-for-bit at fp32
+        y = shard.astype(jnp.float32) + residual
+        q, s, meta = kops.quantize(y, block=QUANT_BLOCK, backend=backend)
+        new_residual = kops.dequantize_accumulate(q, -s, y, meta,
+                                                  backend=backend)
+    q, s = _gather_quantized(q, s, ax)
+    out = _dequant_full(q, s, meta, flat.shape[0], size=x.size,
+                        shape=x.shape, out_dtype=orig_dtype,
+                        mean_div=p if mean else 1, backend=backend, acc=acc)
     return out, new_residual
 
 

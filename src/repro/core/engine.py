@@ -37,6 +37,7 @@ from repro.core import hier as hier_lib
 from repro.core import hw
 from repro.core import planner as planner_lib
 from repro.core import scheduler
+from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +70,13 @@ class CommConfig:
     # forward/backward inside the accumulation scan. With accum_steps == 1
     # the engine falls back to the single reduce-at-end exchange.
     overlap: bool = False
+    # int8 wire kernel dispatch: "auto" resolves through the single
+    # kernels/ops.py policy (pallas on TPU, jnp/interpret-validated pallas
+    # elsewhere); the resolved choice is recorded in EnginePlan.quant_backend.
+    # `fused_quant=False` falls back to the composed (multi-pass) kernels --
+    # an ablation/debug path, not a production setting.
+    quant_backend: str = "auto"
+    fused_quant: bool = True
     # Benchmark ablation: skip gradient reduction entirely. The step then
     # trains on unreduced per-rank gradients (numerically meaningless at
     # dp > 1) — used only to measure the compute-only floor that exposed-
@@ -107,6 +115,14 @@ class EnginePlan:
     tp_axis: Optional[str] = None
     tp: int = 1
     bucket_axes: tuple = ()
+    # int8 wire execution detail, resolved once at plan-build time: which
+    # kernel backend every quantized leg runs ("pallas" | "jnp"), whether the
+    # single-pass fused kernels are used, and the per-bucket padding waste
+    # fraction the (TILE_ROWS x QUANT_BLOCK) tiling charges (only non-trivial
+    # for tiny buckets; () when the wire is not int8).
+    quant_backend: str = "jnp"
+    fused_quant: bool = True
+    quant_pad: tuple = ()
 
     def axes_for(self, bi: int) -> tuple:
         return self.bucket_axes[bi] if self.bucket_axes else self.data_axes
@@ -162,6 +178,14 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
     for a in data_axes:
         dp *= mesh.shape[a]
     use_ef = comm.error_feedback and comm.wire == cl.WIRE_INT8
+    # resolve the kernel backend ONCE here (the plan records the choice; the
+    # traced data path never consults the policy again) and account the
+    # tiling pad waste per bucket so undersized int8 buckets are visible
+    qb = kops.wire_backend(comm.quant_backend)
+    quant_pad = ()
+    if comm.wire == cl.WIRE_INT8:
+        quant_pad = tuple(kops.pad_info(b.n_elems).waste_frac
+                          for b in plan.buckets)
 
     tp = 1
     bucket_axes = ()
@@ -196,7 +220,9 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
         wire_intra = comm.wire_intra or hier_lib.default_wire_intra(comm.wire)
         hier_spec = hier_lib.HierSpec(wire_intra=wire_intra,
                                       wire_inter=comm.wire,
-                                      error_feedback=use_ef)
+                                      error_feedback=use_ef,
+                                      backend=qb,
+                                      fused=comm.fused_quant)
         n_node = mesh.shape[hier_lib.NODE_AXIS]
         n_local = mesh.shape[hier_lib.LOCAL_AXIS]
         if comm.topo is not None:
@@ -208,7 +234,9 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
             # model: small latency-bound buckets may stay flat while bulk
             # buckets take the hierarchy (MLSL per-message phase choice)
             algos = scheduler.route_buckets(plan, hw.TOPOLOGIES[comm.topo],
-                                            nodes=n_node)
+                                            nodes=n_node, wire=comm.wire,
+                                            ef=use_ef,
+                                            fused_quant=comm.fused_quant)
         else:
             algos = tuple(planner_lib.ALGO_HIER for _ in plan.buckets)
         if tp_axis is not None:
@@ -226,7 +254,8 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
                       hier_spec=hier_spec, n_node=n_node, n_local=n_local,
                       overlap=comm.overlap, accum_steps=comm.accum_steps,
                       skip_reduce=comm.skip_reduce, tp_axis=tp_axis, tp=tp,
-                      bucket_axes=bucket_axes)
+                      bucket_axes=bucket_axes, quant_backend=qb,
+                      fused_quant=comm.fused_quant, quant_pad=quant_pad)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -293,19 +322,29 @@ class CommEngine:
 
     # -- the data path ------------------------------------------------------
 
-    def _reduce_bucket(self, flat, residual, bi: int):
+    def _reduce_bucket(self, flat, residual, bi: int, acc=None):
         """One fused message over the data axes: flat or two-level path per
-        the bucket routing. Returns (reduced, new_residual_or_None)."""
+        the bucket routing. Returns (reduced, new_residual_or_None).
+
+        `acc` (f32, flat's shape) folds an existing accumulator into the
+        gather-side dequantize (kernels.ops.dequantize_accumulate): on the
+        int8 wire the sum lands in the same pass that expands the wire
+        payload, instead of a separate full-size read-add-write."""
         p = self.plan
         if p.algos[bi] == planner_lib.ALGO_HIER:
             if p.use_ef:
                 return hier_lib.hier_allreduce_ef(flat, residual,
-                                                  p.hier_spec, mean=True)
-            return hier_lib.hier_allreduce(flat, p.hier_spec, mean=True), None
+                                                  p.hier_spec, mean=True,
+                                                  acc=acc)
+            return hier_lib.hier_allreduce(flat, p.hier_spec, mean=True,
+                                           acc=acc), None
         if p.use_ef:
-            return cl.allreduce_ef(flat, residual, p.data_axes, mean=True)
-        return cl.allreduce(flat, p.axes_for(bi), wire=p.wire,
-                            mean=True), None
+            return cl.allreduce_ef(flat, residual, p.data_axes, mean=True,
+                                   backend=p.quant_backend,
+                                   fused=p.fused_quant, acc=acc)
+        return cl.allreduce(flat, p.axes_for(bi), wire=p.wire, mean=True,
+                            backend=p.quant_backend, fused=p.fused_quant,
+                            acc=acc), None
 
     def reduce_chained(self, grads, residuals, token):
         """Fused, prioritized, wire-precision gradient exchange, continuing
@@ -360,6 +399,114 @@ class CommEngine:
                     new_leaves[lid] = leaf
         out = jax.tree_util.tree_unflatten(p.buckets.treedef, new_leaves)
         return out, (tuple(new_residuals) if p.use_ef else residuals), token
+
+    # -- flat gradient accumulation (microbatch loop) -----------------------
+    #
+    # The trainer's accumulation loop used to materialize a reduced gradient
+    # TREE per microbatch and tree-add it into a sum. With the int8 wire that
+    # is a full extra read+write of the model per microbatch. These methods
+    # keep the accumulator in the engine's own bucket layout (one flat f32
+    # buffer per fused bucket) so the add rides the gather-side
+    # dequantize_accumulate pass instead.
+
+    def init_accum(self):
+        """Zero accumulators in bucket layout: one flat f32 buffer per
+        fusable bucket, a per-leaf f32 tuple for non-fusable ones."""
+        p = self.plan
+        return tuple(
+            jnp.zeros((b.n_elems,), jnp.float32) if p.fusable[bi]
+            else tuple(jnp.zeros(shape, jnp.float32) for shape in b.shapes)
+            for bi, b in enumerate(p.buckets.buckets))
+
+    def reduce_accum_chained(self, grads, acc, residuals, token):
+        """reduce_chained, but the reduced messages land IN the bucket-layout
+        accumulator (`acc`, from `init_accum`) instead of coming back as a
+        gradient tree: acc'[bi] = acc[bi] + reduce(bucket bi of grads).
+
+        On the int8 wire the accumulate is fused into the gather-side
+        dequantize (one pass); on float wires it is a plain add on the
+        reduced message (still bucket-sized, never tree-shaped). Returns
+        (new_acc, new_residuals, token) — unbucketed via `unfuse_accum`
+        after the last microbatch.
+        """
+        p = self.plan
+        leaves = jax.tree_util.tree_leaves(grads)
+        new_acc = []
+        new_residuals = []
+        for bi, bucket in enumerate(p.buckets.buckets):
+            if p.fusable[bi]:
+                flat = scheduler.fuse_bucket(leaves, bucket)
+                if p.skip_reduce:
+                    new_acc.append(acc[bi] + flat)
+                    if p.use_ef:
+                        new_residuals.append(residuals[bi])
+                    continue
+                if p.prioritize:
+                    flat, token = scheduler.chain_barrier(flat, token)
+                red, res = self._reduce_bucket(
+                    flat, residuals[bi] if p.use_ef else None, bi,
+                    acc=acc[bi])
+                if p.use_ef:
+                    new_residuals.append(res)
+                if p.prioritize:
+                    token = scheduler._token_of(red)
+                new_acc.append(red)
+            else:
+                vals = [leaves[i] for i in bucket.leaf_ids]
+                if p.skip_reduce:
+                    new_acc.append(tuple(
+                        a + v.astype(jnp.float32)
+                        for a, v in zip(acc[bi], vals)))
+                    if p.use_ef:
+                        new_residuals.append(residuals[bi])
+                    continue
+                if p.prioritize:
+                    vals, token = scheduler.chain_barrier(vals, token)
+                wire = p.wire if p.wire != cl.WIRE_INT8 else cl.WIRE_BF16
+                vals = [cl.allreduce(v, p.axes_for(bi), wire=wire, mean=True)
+                        for v in vals]
+                if p.use_ef:
+                    new_residuals.append(residuals[bi])
+                if p.prioritize:
+                    token = scheduler._token_of(vals[0])
+                new_acc.append(tuple(
+                    a + v.astype(jnp.float32)
+                    for a, v in zip(acc[bi], vals)))
+        return (tuple(new_acc),
+                (tuple(new_residuals) if p.use_ef else residuals), token)
+
+    def unfuse_accum(self, acc):
+        """Bucket-layout accumulator -> f32 gradient tree (no dtype cast:
+        the trainer divides by accum_steps before casting to param dtype)."""
+        p = self.plan
+        leaves = [None] * p.buckets.treedef.num_leaves
+        for bi, b in enumerate(p.buckets.buckets):
+            if p.fusable[bi]:
+                off = 0
+                for lid, size, shape in zip(b.leaf_ids, b.sizes, b.shapes):
+                    leaves[lid] = acc[bi][off:off + size].reshape(shape)
+                    off += size
+            else:
+                for lid, a in zip(b.leaf_ids, acc[bi]):
+                    leaves[lid] = a
+        return jax.tree_util.tree_unflatten(p.buckets.treedef, leaves)
+
+    def gate_token_accum(self, acc):
+        """`gate_token` over a bucket-layout accumulator (blocking schedule:
+        gate the next microbatch on every collective having retired)."""
+        p = self.plan
+        toks = []
+        for bi in range(p.n_buckets):
+            if p.fusable[bi]:
+                toks.append(acc[bi].reshape(-1)[0])
+            else:
+                toks.extend(a.reshape(-1)[0] for a in acc[bi])
+        if not toks:
+            return jnp.zeros((), jnp.float32)
+        out = toks[0]
+        for t in toks[1:]:
+            out = out + t
+        return out
 
     def gate_token(self, grads):
         """A scalar data-dependent on EVERY collective of the exchange.

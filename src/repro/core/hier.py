@@ -49,6 +49,11 @@ class HierSpec:
     wire_intra: str = cl.WIRE_FP32     # reduce-scatter / all-gather legs
     wire_inter: str = cl.WIRE_FP32     # fabric allreduce leg
     error_feedback: bool = False       # int8 fabric leg only
+    # quantization-kernel dispatch for the int8 fabric leg: resolved through
+    # the single kernels/ops.py policy (kops.wire_backend) -- the CommEngine
+    # resolves "auto" once at plan-build time and records the choice.
+    backend: str = "auto"
+    fused: bool = True                 # single-pass kernels (False: composed)
 
     def __post_init__(self):
         if self.wire_intra not in INTRA_WIRES:
@@ -60,6 +65,9 @@ class HierSpec:
             raise ValueError(self.wire_inter)
         if self.error_feedback and self.wire_inter != cl.WIRE_INT8:
             raise ValueError("error feedback requires the int8 fabric leg")
+        if self.backend not in ("auto", "pallas", "jnp"):
+            raise ValueError(
+                f"unknown quantization backend {self.backend!r}")
 
 
 def default_wire_intra(wire_inter: str) -> str:
@@ -83,12 +91,16 @@ def _pad_quantum(local: int, node: int, wire_inter: str) -> int:
 
 
 def hier_allreduce(x: jax.Array, spec: HierSpec = HierSpec(), *,
-                   mean: bool = False) -> jax.Array:
+                   mean: bool = False,
+                   acc: jax.Array | None = None) -> jax.Array:
     """Two-level allreduce; shape- and dtype-preserving.
 
     Equivalent to ``collectives.allreduce(x, (node_axis, local_axis))`` but
     with the fabric leg carrying 1/local_size of the volume and each leg's
-    wire precision independently selectable.
+    wire precision independently selectable. The int8 fabric leg consumes
+    the wire-dtype shard directly (cast folded into the quantize tile --
+    no materialized cast copy between the legs). `acc` (f32, x's shape)
+    accumulates the reduced result into an existing buffer.
     """
     orig_dtype = x.dtype
     local = cl.axis_size(spec.local_axis)
@@ -104,26 +116,30 @@ def hier_allreduce(x: jax.Array, spec: HierSpec = HierSpec(), *,
     shard = lax.psum_scatter(flat, spec.local_axis, scatter_dimension=0,
                              tiled=True)
     # leg 2: inter-node allreduce over the fabric, 1/local of the volume
-    shard = cl.allreduce(shard, (spec.node_axis,), wire=spec.wire_inter)
+    shard = cl.allreduce(shard, (spec.node_axis,), wire=spec.wire_inter,
+                         backend=spec.backend, fused=spec.fused)
     # leg 3: intra-node all-gather over the fast link
     out = lax.all_gather(shard, spec.local_axis, axis=0, tiled=True)
 
     out = out[: x.size].reshape(x.shape).astype(orig_dtype)
     if mean:
         out = out / p
+    if acc is not None:
+        out = acc.reshape(x.shape) + out
     return out
 
 
 def hier_allreduce_ef(x: jax.Array, residual: jax.Array,
                       spec: HierSpec = HierSpec(wire_inter=cl.WIRE_INT8,
                                                 error_feedback=True), *,
-                      mean: bool = False):
+                      mean: bool = False, acc: jax.Array | None = None):
     """Two-level allreduce with error feedback on the int8 fabric leg.
 
     ``residual`` has shape ``ef_residual_shape(x.size, local, node)`` -- the
     per-rank quantization error of this rank's fabric shard, carried into the
     next call (1-bit-SGD style unbiasing, applied only where the lossy wire
-    is: the fabric). Returns (reduced, new_residual).
+    is: the fabric). The fabric leg runs the fused quantize+error-feedback
+    kernel per `spec.backend`/`spec.fused`. Returns (reduced, new_residual).
     """
     assert spec.wire_inter == cl.WIRE_INT8, spec
     orig_dtype = x.dtype
@@ -139,12 +155,16 @@ def hier_allreduce_ef(x: jax.Array, residual: jax.Array,
     shard = lax.psum_scatter(flat, spec.local_axis, scatter_dimension=0,
                              tiled=True)
     shard, new_residual = cl.allreduce_ef(shard, residual,
-                                          (spec.node_axis,))
+                                          (spec.node_axis,),
+                                          backend=spec.backend,
+                                          fused=spec.fused)
     out = lax.all_gather(shard, spec.local_axis, axis=0, tiled=True)
 
     out = out[: x.size].reshape(x.shape).astype(orig_dtype)
     if mean:
         out = out / p
+    if acc is not None:
+        out = acc.reshape(x.shape) + out
     return out, new_residual
 
 

@@ -102,6 +102,10 @@ class Topology:
     intra_fault: LinkDegradation = HEALTHY
     inter_fault: LinkDegradation = HEALTHY
     straggler: float = 1.0
+    # per-rank main-memory bandwidth (bytes/s): what the wire-quantization
+    # transform passes are paced by. Defaults to the Xeon 6148 node the
+    # paper's platforms are built from; TPU topologies override with HBM.
+    mem_bw: float = 2 * 128e9
 
     def flat_size(self, nodes: int) -> int:
         return nodes * self.local_size
@@ -144,7 +148,7 @@ CLOUD_10G = Topology("xeon-shm-10gbe", intra=SHM_LINK, inter=ETH_10G,
 HPC_OPA = Topology("xeon-shm-opa", intra=SHM_LINK, inter=OMNIPATH,
                    local_size=4)
 TPU_MULTIPOD = Topology("v5e-ici-dcn", intra=ICI_LINK, inter=DCN_LINK,
-                        local_size=256)
+                        local_size=256, mem_bw=TPU_V5E.mem_bw)
 CLOUD_VIRT = Topology("cloud-virtio-sriov", intra=VIRTIO_TCP,
                       inter=SRIOV_10G, local_size=4)
 
@@ -189,12 +193,67 @@ def all_to_all_time(nbytes: float, p: int, link: Link) -> float:
     return steps * link.latency + nbytes * (p - 1) / p / link.bw
 
 
-def hier_allreduce_time(nbytes: float, nodes: int, topo: Topology) -> float:
+# --- wire-quantization overhead (the int8 transform's HBM traffic) ----------
+# Per-element HBM bytes of the int8 wire transform, by pass. The fused Pallas
+# kernels (repro.kernels.quant8) read and write each gradient element once
+# per leg direction; the composed (unfused) path materializes the cast, the
+# error-feedback add, and the residual update as separate round-trips.
+#
+#   quantize side (per element of the quantized message volume):
+#     fused, EF:     read bf16 x (2) + read f32 residual (4)
+#                    + write q (1) + write residual (4)          = 11 B
+#     unfused, EF:   cast bf16->f32 (2r+4w=6) + EF add (4+4r+4w=12)
+#                    + quantize (4r+1w=5) + dequant for the error (1r+4w=5)
+#                    + residual subtract (4+4r+4w=12)            = 40 B
+#     fused, plain:  read bf16 (2) + write q (1)                 =  3 B
+#     unfused, plain: cast (6) + quantize (5)                    = 11 B
+#   dequantize side (gather):
+#     fused:         read q (1) + read f32 acc (4) + write (4)   =  9 B
+#     unfused:       dequant (1r+4w=5) + accumulate (4+4r+4w=12) = 17 B
+#
+# (per-block scales are n/512 of the volume -- ignored as noise.)
+
+_QUANT_BYTES = {                     # (ef, fused) -> quantize-side B/elem
+    (True, True): 11.0, (True, False): 40.0,
+    (False, True): 3.0, (False, False): 11.0,
+}
+_DEQUANT_BYTES = {True: 9.0, False: 17.0}      # fused -> gather-side B/elem
+
+
+def quant_hbm_bytes(n_elems: float, *, ef: bool = False,
+                    fused: bool = True) -> float:
+    """Total modeled HBM traffic (bytes) of one int8 wire transform over an
+    n_elems message: quantize side + gather-side dequantize/accumulate."""
+    if n_elems <= 0:
+        return 0.0
+    return n_elems * (_QUANT_BYTES[(ef, fused)] + _DEQUANT_BYTES[fused])
+
+
+def quant_overhead_time(nbytes: float, topo: Topology, *, ef: bool = False,
+                        fused: bool = True) -> float:
+    """Time the int8 wire transform adds to one leg: passes x bytes / mem_bw.
+
+    `nbytes` is the f32 size of the quantized message volume (the shard the
+    leg actually quantizes); the per-pass byte counts above are per element,
+    so elems = nbytes / 4."""
+    if nbytes <= 0:
+        return 0.0
+    return quant_hbm_bytes(nbytes / 4.0, ef=ef, fused=fused) / topo.mem_bw
+
+
+def hier_allreduce_time(nbytes: float, nodes: int, topo: Topology, *,
+                        wire_inter: str = "fp32", ef: bool = False,
+                        fused_quant: bool = True) -> float:
     """Two-level allreduce over `nodes` nodes of `topo.local_size` ranks.
 
     intra-node reduce-scatter (full volume, fast link) + inter-node ring
     allreduce on nbytes/local_size (slow fabric) + intra-node all-gather.
     Reduces the fabric volume by local_size vs `flat_allreduce_time`.
+
+    With the int8 fabric wire (`wire_inter="int8"`), the per-leg
+    quantization overhead (passes x bytes / mem_bw) is charged on the
+    fabric-shard volume -- `fused_quant` selects the single-pass kernels,
+    so the planner sees the fusion win.
     """
     local = topo.local_size
     if nbytes <= 0 or topo.flat_size(nodes) <= 1:
@@ -203,16 +262,26 @@ def hier_allreduce_time(nbytes: float, nodes: int, topo: Topology) -> float:
     t += ring_allreduce_time(nbytes / max(local, 1), nodes,
                              topo.effective_inter)
     t += all_gather_time(nbytes, local, topo.effective_intra)
+    if wire_inter == "int8":
+        t += quant_overhead_time(nbytes / max(local, 1), topo, ef=ef,
+                                 fused=fused_quant)
     return t
 
 
-def flat_allreduce_time(nbytes: float, nodes: int, topo: Topology) -> float:
+def flat_allreduce_time(nbytes: float, nodes: int, topo: Topology, *,
+                        wire: str = "fp32", ef: bool = False,
+                        fused_quant: bool = True) -> float:
     """Single-level ring over all nodes*local ranks, paced end to end by the
     (effective) fabric: the topology-unaware algorithm does not exploit the
     intra-node transport, so every hop rides the fabric path (all of a
-    node's ranks serialize on its NIC)."""
-    return ring_allreduce_time(nbytes, topo.flat_size(nodes),
-                               topo.effective_inter)
+    node's ranks serialize on its NIC). The int8 wire's quantization
+    overhead is charged on the full message (the gather-side dequantize
+    consumes the fully-gathered volume)."""
+    t = ring_allreduce_time(nbytes, topo.flat_size(nodes),
+                            topo.effective_inter)
+    if wire == "int8":
+        t += quant_overhead_time(nbytes, topo, ef=ef, fused=fused_quant)
+    return t
 
 
 def latency_bound_fraction(nbytes: float, p: int, link: Link) -> float:

@@ -255,19 +255,24 @@ ALGO_HIER = "hier"
 
 
 def bucket_allreduce_times(buckets, algos, nodes: int, topo: hw.Topology, *,
-                           bytes_per_elem: float = 4.0) -> tuple:
+                           bytes_per_elem: float = 4.0, wire: str = "fp32",
+                           ef: bool = False,
+                           fused_quant: bool = True) -> tuple:
     """Per-bucket allreduce service time under each bucket's routed
     algorithm (ALGO_FLAT rings over all ranks, ALGO_HIER two-level).
 
     `buckets` is a scheduler.BucketPlan's bucket tuple (anything with
     ``n_elems``); `algos` the matching route tuple (e.g. an
-    engine.EnginePlan's ``algos``)."""
+    engine.EnginePlan's ``algos``). `wire`/`ef`/`fused_quant` charge the
+    int8 wire's quantization-overhead term (hw.quant_overhead_time)."""
     out = []
     for b, algo in zip(buckets, algos):
         nbytes = b.n_elems * bytes_per_elem
-        t = (hw.hier_allreduce_time(nbytes, nodes, topo)
+        t = (hw.hier_allreduce_time(nbytes, nodes, topo, wire_inter=wire,
+                                    ef=ef, fused_quant=fused_quant)
              if algo == ALGO_HIER else
-             hw.flat_allreduce_time(nbytes, nodes, topo))
+             hw.flat_allreduce_time(nbytes, nodes, topo, wire=wire, ef=ef,
+                                    fused_quant=fused_quant))
         out.append(t)
     return tuple(out)
 
@@ -293,7 +298,8 @@ def estimate_overlap(buckets, algos, nodes: int, topo: hw.Topology,
 
 
 def choose_allreduce_algo(nbytes: float, nodes: int, topo: hw.Topology,
-                          fault=None) -> str:
+                          fault=None, *, wire: str = "fp32",
+                          ef: bool = False, fused_quant: bool = True) -> str:
     """Pick flat vs two-level allreduce for one message from the per-level
     bandwidth/latency model (repro.core.hw).
 
@@ -309,13 +315,20 @@ def choose_allreduce_algo(nbytes: float, nodes: int, topo: hw.Topology,
     topology before costing, so routing re-plans under the degraded model
     — e.g. a congested inter fabric shifts the flat/hier crossover and
     re-routes bulk buckets onto the hierarchy.
+
+    `wire`/`ef`/`fused_quant` add the int8 wire's quantization-overhead
+    term to both candidates (the hierarchy quantizes only the fabric shard,
+    the flat ring the full message), so routing sees the transform cost --
+    and the fusion win -- not just the wire bytes.
     """
     if topo.local_size <= 1 or nodes <= 1:
         return ALGO_FLAT
     if fault is not None:
         topo = fault.apply_to_topology(topo)
-    t_flat = hw.flat_allreduce_time(nbytes, nodes, topo)
-    t_hier = hw.hier_allreduce_time(nbytes, nodes, topo)
+    t_flat = hw.flat_allreduce_time(nbytes, nodes, topo, wire=wire, ef=ef,
+                                    fused_quant=fused_quant)
+    t_hier = hw.hier_allreduce_time(nbytes, nodes, topo, wire_inter=wire,
+                                    ef=ef, fused_quant=fused_quant)
     return ALGO_HIER if t_hier < t_flat else ALGO_FLAT
 
 

@@ -165,7 +165,9 @@ def reduce_with_priority(grad_tree, reduce_fn: Callable[[jax.Array, Bucket], jax
 
 
 def route_buckets(plan: BucketPlan, topo, nodes: int, *,
-                  bytes_per_elem: float = 4.0, fault=None) -> tuple:
+                  bytes_per_elem: float = 4.0, fault=None,
+                  wire: str = "fp32", ef: bool = False,
+                  fused_quant: bool = True) -> tuple:
     """Per-bucket flat-vs-hierarchical routing over a machine hierarchy.
 
     For each fused message, asks the per-level cost model which allreduce
@@ -180,11 +182,16 @@ def route_buckets(plan: BucketPlan, topo, nodes: int, *,
     flat/hier crossover, so buckets that routed flat on the healthy machine
     may re-route onto the two-level decomposition (and vice versa for a
     degraded intra transport).
+
+    `wire`/`ef`/`fused_quant` (the engine's wire format and kernel-fusion
+    setting) charge the int8 quantization-overhead term on both candidate
+    routes, so the crossover reflects the transform cost too.
     """
     from repro.core import planner as pl
     return tuple(
         pl.choose_allreduce_algo(b.n_elems * bytes_per_elem, nodes, topo,
-                                 fault=fault)
+                                 fault=fault, wire=wire, ef=ef,
+                                 fused_quant=fused_quant)
         for b in plan.buckets)
 
 

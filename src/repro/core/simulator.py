@@ -131,7 +131,9 @@ HEALTHY_FAULT = FaultSpec()
 def _allreduce_durations(layers: Sequence[SimLayer], p: int, link: hw.Link,
                          overlap_eff: float = 1.0,
                          topo: hw.Topology | None = None,
-                         comm_algo: str = "auto") -> list:
+                         comm_algo: str = "auto", wire: str = "fp32",
+                         ef: bool = False,
+                         fused_quant: bool = True) -> list:
     """Per-layer allreduce service times.
 
     `overlap_eff` (0 < eta <= 1) models imperfect asynchronous progress:
@@ -144,14 +146,19 @@ def _allreduce_durations(layers: Sequence[SimLayer], p: int, link: hw.Link,
     layer's time is the flat ring over the fabric, the two-level
     decomposition, or the per-message cost-model choice (`comm_algo` in
     {"flat", "hier", "auto"}) -- how plans weigh hierarchical collectives.
+    `wire`/`ef`/`fused_quant` charge the int8 wire's quantization-overhead
+    term (hw.quant_overhead_time) on the topology-costed paths.
     """
     if topo is None:
         return [hw.ring_allreduce_time(l.wgrad_bytes, p, link) / overlap_eff
                 for l in layers]
     out = []
     for l in layers:
-        t_flat = hw.flat_allreduce_time(l.wgrad_bytes, p, topo)
-        t_hier = hw.hier_allreduce_time(l.wgrad_bytes, p, topo)
+        t_flat = hw.flat_allreduce_time(l.wgrad_bytes, p, topo, wire=wire,
+                                        ef=ef, fused_quant=fused_quant)
+        t_hier = hw.hier_allreduce_time(l.wgrad_bytes, p, topo,
+                                        wire_inter=wire, ef=ef,
+                                        fused_quant=fused_quant)
         t = {"flat": t_flat, "hier": t_hier,
              "auto": min(t_flat, t_hier)}[comm_algo]
         out.append(t / overlap_eff)
@@ -215,7 +222,9 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
                        overlap_eff: float = 1.0,
                        topo: hw.Topology | None = None,
                        comm_algo: str = "auto",
-                       fault: FaultSpec | None = None) -> IterationStats:
+                       fault: FaultSpec | None = None, wire: str = "fp32",
+                       ef: bool = False,
+                       fused_quant: bool = True) -> IterationStats:
     """Simulate bwd(iter k) + allreduce + fwd(iter k+1) under a policy.
 
     Backward runs layers L-1..0; layer i's allreduce becomes ready when its
@@ -244,7 +253,9 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
                fault.compute_slowdown if fault is not None else 1.0)
     durations = _allreduce_durations(layers, p, link,
                                      overlap_eff=overlap_eff,
-                                     topo=topo, comm_algo=comm_algo)
+                                     topo=topo, comm_algo=comm_algo,
+                                     wire=wire, ef=ef,
+                                     fused_quant=fused_quant)
     timeline = []
 
     if policy is Policy.BLOCKING:

@@ -10,6 +10,20 @@ block a multiple of 128 (lane width) so each VMEM tile is MXU/VPU aligned.
 The grid walks row-tiles of TILE_ROWS blocks; abs-max reduction, scaling and
 rounding all happen inside VMEM, one HBM round-trip total -- on CPU the same
 kernels run under interpret=True and are validated against ref.py.
+
+Fused wire hot path (one HBM read + one write of the gradient per leg):
+
+  * ``quantize_cast_blocks``   -- bf16/f32 input cast in-tile, so the wire
+    cast never materializes an intermediate copy in HBM;
+  * ``quantize_ef_blocks``     -- x + residual -> (q, scales, new_residual)
+    in a single VMEM pass (the error-feedback add, the quantization, and the
+    residual update that used to be 3-4 separate passes);
+  * ``dequantize_accumulate_blocks`` -- acc + q * s on the gather side, so
+    microbatch gradient accumulation consumes the int8 message directly.
+
+A bf16 tile rides the f32 (TILE_ROWS x block) tiling quantum: block is a
+multiple of 128 lanes and sub-native sublane tiles are masked by Mosaic, so
+one grid layout serves every input dtype and callers pad once.
 """
 
 from __future__ import annotations
@@ -27,7 +41,10 @@ TILE_ROWS = 8                # quantization blocks handled per grid step
 
 
 def _quantize_kernel(x_ref, q_ref, s_ref):
-    """One tile: (TILE_ROWS, block) f32 -> int8 + per-row scale."""
+    """One tile: (TILE_ROWS, block) float -> int8 + per-row scale.
+
+    The input cast to f32 happens on the VMEM tile, so a bf16 wire buffer is
+    consumed directly (no materialized f32 copy in HBM)."""
     x = x_ref[...].astype(jnp.float32)
     amax = jnp.max(jnp.abs(x), axis=1)                   # (rows,)
     scale = amax / 127.0
@@ -35,6 +52,26 @@ def _quantize_kernel(x_ref, q_ref, s_ref):
     q = jnp.clip(jnp.round(x / safe[:, None]), -127, 127)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale.astype(jnp.float32)
+
+
+def _quantize_ef_kernel(x_ref, r_ref, q_ref, s_ref, nr_ref):
+    """Fused error-feedback quantize, one tile in VMEM:
+
+        y = f32(x) + residual
+        q, scale = blockwise int8 quantization of y
+        new_residual = y - q * scale
+
+    What used to be the add / quantize / dequantize-to-get-the-error triple
+    (3-4 HBM round-trips in collectives.allreduce_ef) reads x and residual
+    once and writes q, scale, new_residual once."""
+    y = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(y), axis=1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.clip(jnp.round(y / safe[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+    nr_ref[...] = y - q * scale[:, None]
 
 
 def _dequantize_kernel(q_ref, s_ref, o_ref, *, out_dtype):
@@ -52,19 +89,34 @@ def _dequant_accum_kernel(q_ref, s_ref, acc_ref, o_ref, *, out_dtype):
 
 
 def _grid(n_blocks: int) -> tuple:
-    assert n_blocks % TILE_ROWS == 0, (n_blocks, TILE_ROWS)
+    # ValueError (not assert): the message survives `python -O` and names the
+    # offending shape plus the tiling quantum the caller must pad to.
+    if n_blocks % TILE_ROWS != 0:
+        raise ValueError(
+            f"n_blocks={n_blocks} is not a multiple of the row-tile quantum "
+            f"TILE_ROWS={TILE_ROWS}; pad the flat buffer to a multiple of "
+            f"TILE_ROWS * block elements (see repro.kernels.ops._to_blocks)")
     return (n_blocks // TILE_ROWS,)
+
+
+def _check_block(shape: tuple) -> None:
+    n_blocks, block = shape
+    if block % LANE != 0:
+        raise ValueError(
+            f"block size {block} of a ({n_blocks}, {block}) buffer is not a "
+            f"multiple of the TPU lane width LANE={LANE}; quantization "
+            f"blocks must tile the 128-lane vector registers")
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize_blocks(x2d: jax.Array, *, interpret: bool = False):
-    """x2d: (n_blocks, block) float -> (int8 (n_blocks, block), f32 (n_blocks,)).
+    """x2d: (n_blocks, block) f32 -> (int8 (n_blocks, block), f32 (n_blocks,)).
 
     n_blocks must be a multiple of TILE_ROWS and block a multiple of LANE
     (callers pad; see repro.kernels.ops).
     """
     n_blocks, block = x2d.shape
-    assert block % LANE == 0, block
+    _check_block(x2d.shape)
     return pl.pallas_call(
         _quantize_kernel,
         grid=_grid(n_blocks),
@@ -81,11 +133,54 @@ def quantize_blocks(x2d: jax.Array, *, interpret: bool = False):
     )(x2d)
 
 
+# The wire cast is folded into the quantize tile (`_quantize_kernel` casts on
+# the VMEM block), so any float input quantizes without a materialized f32
+# copy; the separate name documents the contract for bf16 wire buffers.
+quantize_cast_blocks = quantize_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_ef_blocks(x2d: jax.Array, res2d: jax.Array, *,
+                       interpret: bool = False):
+    """Fused error-feedback quantize (one HBM round-trip).
+
+    x2d: (n_blocks, block) float (bf16 wire buffers welcome -- cast in-tile);
+    res2d: (n_blocks, block) f32 residual carried from the previous step.
+    Returns (q int8, scales f32 (n_blocks,), new_residual f32) where
+    q/scales quantize ``x + res`` and ``new_residual = x + res - q * s``.
+    """
+    n_blocks, block = x2d.shape
+    _check_block(x2d.shape)
+    if res2d.shape != x2d.shape:
+        raise ValueError(
+            f"residual shape {res2d.shape} must match the blocked input "
+            f"shape {x2d.shape}")
+    return pl.pallas_call(
+        _quantize_ef_kernel,
+        grid=_grid(n_blocks),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS,), lambda i: (i,)),
+            pl.BlockSpec((TILE_ROWS, block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, block), jnp.int8),
+            jax.ShapeDtypeStruct((n_blocks,), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d, res2d)
+
+
 @functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
 def dequantize_blocks(q2d: jax.Array, scales: jax.Array, *,
                       out_dtype=jnp.float32, interpret: bool = False):
     n_blocks, block = q2d.shape
-    assert block % LANE == 0, block
+    _check_block(q2d.shape)
     return pl.pallas_call(
         functools.partial(_dequantize_kernel, out_dtype=out_dtype),
         grid=_grid(n_blocks),
@@ -104,7 +199,7 @@ def dequantize_accumulate_blocks(q2d: jax.Array, scales: jax.Array,
                                  acc: jax.Array, *, out_dtype=jnp.float32,
                                  interpret: bool = False):
     n_blocks, block = q2d.shape
-    assert block % LANE == 0, block
+    _check_block(q2d.shape)
     return pl.pallas_call(
         functools.partial(_dequant_accum_kernel, out_dtype=out_dtype),
         grid=_grid(n_blocks),

@@ -28,6 +28,19 @@ def dequantize_accumulate_blocks(q2d: jax.Array, scales: jax.Array,
     return (acc.astype(jnp.float32) + deq).astype(out_dtype)
 
 
+def quantize_ef_blocks(x2d: jax.Array, res2d: jax.Array):
+    """Composed oracle for the fused error-feedback quantize.
+
+    Same expression graph as quant8._quantize_ef_kernel: the residual update
+    is ``y + q * (-s)`` via dequantize_accumulate_blocks, which is bitwise
+    ``y - q * s`` (IEEE negation is exact), so the fused kernel and this
+    composition agree bit-for-bit at fp32."""
+    y = x2d.astype(jnp.float32) + res2d.astype(jnp.float32)
+    q, scale = quantize_blocks(y)
+    new_residual = dequantize_accumulate_blocks(q, -scale, y)
+    return q, scale, new_residual
+
+
 def flash_attention(q, k, v, *, causal=True, window=None):
     """Oracle for kernels.flashattn: plain masked softmax attention.
 

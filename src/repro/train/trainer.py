@@ -316,12 +316,17 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
         itself is token-ordered), so the compiler may overlap the two —
         MLSL's EP servers, expressed statically. Both schedules perform the
         identical fp32 operation sequence, so they are bit-identical.
+
+        The accumulator lives in the engine's BUCKET layout (one flat f32
+        buffer per fused bucket, engine.init_accum) rather than as a
+        gradient tree: the per-microbatch add then rides the gather-side
+        dequantize_accumulate pass on the int8 wire (and stays one
+        bucket-sized add on float wires) instead of a full extra
+        read+write of the model per microbatch. The tree is restored once,
+        after the last microbatch (engine.unfuse_accum).
         """
         acc = comm.accum_steps
         micro = _split_micro(batch, acc)
-        gz = jax.tree_util.tree_map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), params)
-        add = lambda a, b: a + b  # noqa: E731
         token0 = jnp.zeros((), jnp.float32)
 
         # Microbatch 0 is peeled out of the scan in BOTH schedules so the
@@ -337,28 +342,27 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
             # blocking baseline: reduce each microbatch's buckets before the
             # next microbatch's compute. Without prioritization the engine
             # does not thread its own token, so the gate is derived from
-            # every bucket's output instead — blocking must not silently
-            # weaken under prioritize=False.
-            def exchange(g, res, token):
-                red, res, token = engine.reduce_chained(_to_f32(g), res,
-                                                        token)
+            # every bucket's accumulator instead — blocking must not
+            # silently weaken under prioritize=False.
+            def exchange(g, bacc, res, token):
+                bacc, res, token = engine.reduce_accum_chained(
+                    _to_f32(g), bacc, res, token)
                 if not comm.prioritize:
-                    token = engine.gate_token(red)
-                return red, res, token
+                    token = engine.gate_token_accum(bacc)
+                return bacc, res, token
 
-            red0, residuals, token = exchange(g0, residuals, token0)
-            gsum = jax.tree_util.tree_map(add, gz, red0)
+            bacc, residuals, token = exchange(g0, engine.init_accum(),
+                                              residuals, token0)
 
             def body(carry, mb):
-                gsum, lsum, res, token = carry
+                bacc, lsum, res, token = carry
                 mb, token = scheduler.chain_barrier(mb, token)
                 loss, g = jax.value_and_grad(loss_fn)(params, mb)
-                red, res, token = exchange(g, res, token)
-                gsum = jax.tree_util.tree_map(add, gsum, red)
-                return (gsum, lsum + loss, res, token), None
+                bacc, res, token = exchange(g, bacc, res, token)
+                return (bacc, lsum + loss, res, token), None
 
-            (gsum, lsum, residuals, _), _ = compat.maybe_scan(
-                body, (gsum, loss0, residuals, token), rest,
+            (bacc, lsum, residuals, _), _ = compat.maybe_scan(
+                body, (bacc, loss0, residuals, token), rest,
                 unroll=unroll_scans)
         else:
             # software pipeline: iteration k reduces microbatch k-1's
@@ -366,19 +370,19 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
             # token-ordered but carries no dependence on the compute); the
             # epilogue drains the last microbatch
             def body(carry, mb):
-                gsum, lsum, pending, res, token = carry
+                bacc, lsum, pending, res, token = carry
                 loss, g = jax.value_and_grad(loss_fn)(params, mb)
-                red, res, token = engine.reduce_chained(pending, res, token)
-                gsum = jax.tree_util.tree_map(add, gsum, red)
-                return (gsum, lsum + loss, _to_f32(g), res, token), None
+                bacc, res, token = engine.reduce_accum_chained(
+                    pending, bacc, res, token)
+                return (bacc, lsum + loss, _to_f32(g), res, token), None
 
-            (gsum, lsum, pending, residuals, token), _ = compat.maybe_scan(
-                body, (gz, loss0, _to_f32(g0), residuals, token0), rest,
-                unroll=unroll_scans)
-            red, residuals, _ = engine.reduce_chained(pending, residuals,
-                                                      token)
-            gsum = jax.tree_util.tree_map(add, gsum, red)
+            (bacc, lsum, pending, residuals, token), _ = compat.maybe_scan(
+                body, (engine.init_accum(), loss0, _to_f32(g0), residuals,
+                       token0), rest, unroll=unroll_scans)
+            bacc, residuals, _ = engine.reduce_accum_chained(
+                pending, bacc, residuals, token)
 
+        gsum = engine.unfuse_accum(bacc)
         grads = jax.tree_util.tree_map(
             lambda g, pp: (g / acc).astype(pp.dtype), gsum, params)
         return lsum / acc, grads, residuals
