@@ -159,6 +159,11 @@ class Ledger:
         self.module = module
         self.metrics: list = []
         self.created_unix = time.time()
+        self.t_start = time.perf_counter()   # for runtime/wall_s
+
+    def elapsed_s(self) -> float:
+        """Wall seconds since this ledger was created."""
+        return time.perf_counter() - self.t_start
 
     def record(self, name: str, value, unit: str = "",
                better: str | None = None, stable: bool = True) -> None:
@@ -211,11 +216,19 @@ def current_ledger() -> Ledger | None:
 
 
 def finish_ledger(out_dir: str | None = None) -> str | None:
-    """Write and deactivate the active ledger; returns the artifact path."""
+    """Write and deactivate the active ledger; returns the artifact path.
+
+    Stamps the module's total wall runtime (``runtime/wall_s``) into the
+    record first — unstable by construction, so the diff gate only ever
+    warns on it. (Recorded here, not in ``write()``: a bare Ledger used as
+    a container round-trips exactly what was recorded into it.)
+    """
     global _ACTIVE
     led, _ACTIVE = _ACTIVE, None
     if led is None:
         return None
+    led.record("runtime/wall_s", led.elapsed_s(), unit="s", better="lower",
+               stable=False)
     return led.write(out_dir)
 
 

@@ -45,12 +45,15 @@ def main() -> None:
             status = "failed"
             traceback.print_exc(file=sys.stderr)
         finally:
-            n_metrics = len(common.current_ledger().metrics)
+            led = common.current_ledger()
+            n_metrics = len(led.metrics)
+            runtime_s = led.elapsed_s()
             path = common.finish_ledger(out_dir)
         index[name] = {"artifact": os.path.basename(path),
-                       "status": status, "n_metrics": n_metrics}
-        print(f"ledger: {path} ({status}, {n_metrics} metrics)",
-              file=sys.stderr)
+                       "status": status, "n_metrics": n_metrics,
+                       "runtime_s": runtime_s}
+        print(f"ledger: {path} ({status}, {n_metrics} metrics, "
+              f"{runtime_s:.1f}s)", file=sys.stderr)
 
     # aggregate: one index artifact tying the per-module ledgers of this run
     # together (same schema; module metadata lives in each artifact)
@@ -58,6 +61,11 @@ def main() -> None:
     for name, info in index.items():
         agg.record(f"index/{name}/n_metrics", float(info["n_metrics"]))
         agg.record(f"index/{name}/status", info["status"])
+        agg.record(f"index/{name}/runtime_s", info["runtime_s"], unit="s",
+                   better="lower", stable=False)
+    agg.record("index/total_runtime_s",
+               sum(i["runtime_s"] for i in index.values()), unit="s",
+               better="lower", stable=False)
     rec = agg.to_record()
     rec["modules"] = index
     agg_path = os.path.join(out_dir, f"{common.ARTIFACT_PREFIX}index.json")

@@ -98,19 +98,65 @@ def _fmt_value(v):
     return f"{v:.6g}"
 
 
+_BUCKET_COLS = ("elems", "route", "wire", "intra_B", "inter_B", "total_B",
+                "t_model_us", "t_measured_us")
+_BUCKET_HEADER = ("| bucket | " + " | ".join(_BUCKET_COLS) + " |\n"
+                  "|---|" + "---:|" * len(_BUCKET_COLS))
+
+
+def _comm_stats_buckets(metrics):
+    """{bucket_key: {field: value}} for ``comm_stats/<bucket>/<field>``
+    metric names (per-bucket ``bNN`` groups plus the ``total`` row)."""
+    buckets = {}
+    for m in metrics:
+        parts = m["name"].split("/")
+        if len(parts) != 3 or parts[0] != "comm_stats":
+            continue
+        buckets.setdefault(parts[1], {})[parts[2]] = m["value"]
+    return buckets
+
+
+def render_comm_stats(metrics):
+    """Per-bucket markdown table for a module's ``comm_stats/*`` entries
+    (the MLSL-style wire-stats ledger repro.obs.stats writes). Purely a
+    presentation regrouping — these metrics are warn-only by construction
+    (informational or unstable), so the diff gate never trips on them."""
+    buckets = _comm_stats_buckets(metrics)
+    if not buckets:
+        return []
+    lines = ["#### comm_stats per bucket\n", _BUCKET_HEADER]
+    total = buckets.pop("total", None)
+    for key in sorted(buckets):
+        row_vals = [_fmt_value(buckets[key].get(c, "")) for c in _BUCKET_COLS]
+        lines.append(f"| {key} | " + " | ".join(row_vals) + " |")
+    if total is not None:
+        row_vals = [_fmt_value(total.get(c, "")) for c in _BUCKET_COLS]
+        lines.append("| **total** | " + " | ".join(row_vals) + " |")
+    lines.append("")
+    return lines
+
+
 def render(ledgers):
     lines = []
     for module, rec in sorted(ledgers.items()):
         sha = (rec.get("git_sha") or "")[:12]
         lines.append(f"### {module}"
                      + (f"  (`{sha}`)" if sha else "") + "\n")
-        lines.append(_TABLE_HEADER)
-        for m in rec["metrics"]:
-            lines.append(
-                f"| {m['name']} | {_fmt_value(m['value'])} |"
-                f" {m.get('unit') or ''} | {m.get('better') or ''} |"
-                f" {'yes' if m.get('stable', True) else 'no'} |")
-        lines.append("")
+        # comm_stats/<bucket>/<field> entries regroup into a per-bucket
+        # table; everything else renders as the flat metric listing
+        comm_names = {f"comm_stats/{b}/{f}"
+                      for b, fields in _comm_stats_buckets(
+                          rec["metrics"]).items() for f in fields}
+        flat = [m for m in rec["metrics"] if m["name"] not in comm_names]
+        if flat:
+            lines.append(_TABLE_HEADER)
+            for m in flat:
+                lines.append(
+                    f"| {m['name']} | {_fmt_value(m['value'])} |"
+                    f" {m.get('unit') or ''} | {m.get('better') or ''} |"
+                    f" {'yes' if m.get('stable', True) else 'no'} |")
+            lines.append("")
+        lines.extend(render_comm_stats(rec["metrics"]))
     return "\n".join(lines)
 
 

@@ -123,6 +123,10 @@ class EnginePlan:
     quant_backend: str = "jnp"
     fused_quant: bool = True
     quant_pad: tuple = ()
+    # the hw.TOPOLOGIES name the buckets were routed against (None when no
+    # cost-model routing was requested) — kept on the plan so observability
+    # reports (repro.obs.stats) model time on the same topology
+    topo: Optional[str] = None
 
     def axes_for(self, bi: int) -> tuple:
         return self.bucket_axes[bi] if self.bucket_axes else self.data_axes
@@ -133,6 +137,13 @@ class EnginePlan:
 
     def bucket_bytes_list(self, bytes_per_elem: float = 4.0) -> tuple:
         return tuple(b.n_elems * bytes_per_elem for b in self.buckets.buckets)
+
+    def describe(self, *, topo=None) -> str:
+        """The MLSL-style per-bucket stats table for this plan (wire bytes
+        per leg, route, modeled service time). Lazy import: repro.obs sits
+        above core, so the plan only reaches it when a human asks."""
+        from repro.obs import stats as obs_stats
+        return obs_stats.CommStats.from_plan(self, topo=topo).table()
 
 
 def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
@@ -255,7 +266,8 @@ def build_plan(grad_struct, comm: CommConfig, mesh, data_axes, *,
                       overlap=comm.overlap, accum_steps=comm.accum_steps,
                       skip_reduce=comm.skip_reduce, tp_axis=tp_axis, tp=tp,
                       bucket_axes=bucket_axes, quant_backend=qb,
-                      fused_quant=comm.fused_quant, quant_pad=quant_pad)
+                      fused_quant=comm.fused_quant, quant_pad=quant_pad,
+                      topo=comm.topo)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -329,22 +341,28 @@ class CommEngine:
         `acc` (f32, flat's shape) folds an existing accumulator into the
         gather-side dequantize (kernels.ops.dequantize_accumulate): on the
         int8 wire the sum lands in the same pass that expands the wire
-        payload, instead of a separate full-size read-add-write."""
+        payload, instead of a separate full-size read-add-write.
+
+        The whole message is wrapped in a `jax.named_scope` so XLA profiles
+        attribute device time to the named bucket + route (metadata only —
+        numerics and schedules are untouched)."""
         p = self.plan
-        if p.algos[bi] == planner_lib.ALGO_HIER:
+        route = "hier" if p.algos[bi] == planner_lib.ALGO_HIER else "flat"
+        with jax.named_scope(f"bucket{bi}/{route}_allreduce_{p.wire}"):
+            if p.algos[bi] == planner_lib.ALGO_HIER:
+                if p.use_ef:
+                    return hier_lib.hier_allreduce_ef(flat, residual,
+                                                      p.hier_spec, mean=True,
+                                                      acc=acc)
+                return hier_lib.hier_allreduce(flat, p.hier_spec, mean=True,
+                                               acc=acc), None
             if p.use_ef:
-                return hier_lib.hier_allreduce_ef(flat, residual,
-                                                  p.hier_spec, mean=True,
-                                                  acc=acc)
-            return hier_lib.hier_allreduce(flat, p.hier_spec, mean=True,
-                                           acc=acc), None
-        if p.use_ef:
-            return cl.allreduce_ef(flat, residual, p.data_axes, mean=True,
-                                   backend=p.quant_backend,
-                                   fused=p.fused_quant, acc=acc)
-        return cl.allreduce(flat, p.axes_for(bi), wire=p.wire, mean=True,
-                            backend=p.quant_backend, fused=p.fused_quant,
-                            acc=acc), None
+                return cl.allreduce_ef(flat, residual, p.data_axes,
+                                       mean=True, backend=p.quant_backend,
+                                       fused=p.fused_quant, acc=acc)
+            return cl.allreduce(flat, p.axes_for(bi), wire=p.wire,
+                                mean=True, backend=p.quant_backend,
+                                fused=p.fused_quant, acc=acc), None
 
     def reduce_chained(self, grads, residuals, token):
         """Fused, prioritized, wire-precision gradient exchange, continuing
@@ -389,8 +407,9 @@ class CommEngine:
                 if p.prioritize:
                     vals, token = scheduler.chain_barrier(vals, token)
                 wire = p.wire if p.wire != cl.WIRE_INT8 else cl.WIRE_BF16
-                vals = [cl.allreduce(v, p.axes_for(bi), wire=wire, mean=True)
-                        for v in vals]
+                with jax.named_scope(f"bucket{bi}/leafwise_allreduce_{wire}"):
+                    vals = [cl.allreduce(v, p.axes_for(bi), wire=wire,
+                                         mean=True) for v in vals]
                 if p.use_ef:
                     new_residuals.append(residuals[bi])
                 if p.prioritize:
@@ -463,8 +482,9 @@ class CommEngine:
                 if p.prioritize:
                     vals, token = scheduler.chain_barrier(vals, token)
                 wire = p.wire if p.wire != cl.WIRE_INT8 else cl.WIRE_BF16
-                vals = [cl.allreduce(v, p.axes_for(bi), wire=wire, mean=True)
-                        for v in vals]
+                with jax.named_scope(f"bucket{bi}/leafwise_allreduce_{wire}"):
+                    vals = [cl.allreduce(v, p.axes_for(bi), wire=wire,
+                                         mean=True) for v in vals]
                 if p.use_ef:
                     new_residuals.append(residuals[bi])
                 if p.prioritize:
@@ -535,3 +555,16 @@ class CommEngine:
         Returns (reduced_tree, new_residuals)."""
         out, residuals, _ = self.reduce_chained(grads, residuals, None)
         return out, residuals
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self, *, measured=None, topo=None):
+        """MLSL-style per-message statistics for this engine's plan
+        (repro.obs.stats.CommStats): per-bucket wire bytes by leg/level,
+        route, modeled service time on `topo` (defaults to the plan's
+        routing topology), and — when `measured` (a per-bucket seconds
+        sequence, e.g. obs.stats.measure_bucket_times) is given — the
+        measured column. Lazy import keeps core independent of obs."""
+        from repro.obs import stats as obs_stats
+        return obs_stats.CommStats.from_plan(self.plan, measured=measured,
+                                             topo=topo)

@@ -113,13 +113,16 @@ def hier_allreduce(x: jax.Array, spec: HierSpec = HierSpec(), *,
     flat = cl._pad_flat(flat, _pad_quantum(local, node, spec.wire_inter))
 
     # leg 1: intra-node reduce-scatter over the fast link
-    shard = lax.psum_scatter(flat, spec.local_axis, scatter_dimension=0,
-                             tiled=True)
+    with jax.named_scope(f"hier/intra_rs_{spec.wire_intra}"):
+        shard = lax.psum_scatter(flat, spec.local_axis, scatter_dimension=0,
+                                 tiled=True)
     # leg 2: inter-node allreduce over the fabric, 1/local of the volume
-    shard = cl.allreduce(shard, (spec.node_axis,), wire=spec.wire_inter,
-                         backend=spec.backend, fused=spec.fused)
+    with jax.named_scope(f"hier/inter_allreduce_{spec.wire_inter}"):
+        shard = cl.allreduce(shard, (spec.node_axis,), wire=spec.wire_inter,
+                             backend=spec.backend, fused=spec.fused)
     # leg 3: intra-node all-gather over the fast link
-    out = lax.all_gather(shard, spec.local_axis, axis=0, tiled=True)
+    with jax.named_scope(f"hier/intra_ag_{spec.wire_intra}"):
+        out = lax.all_gather(shard, spec.local_axis, axis=0, tiled=True)
 
     out = out[: x.size].reshape(x.shape).astype(orig_dtype)
     if mean:
@@ -152,13 +155,16 @@ def hier_allreduce_ef(x: jax.Array, residual: jax.Array,
     flat = x.reshape(-1).astype(wire_dtype)
     flat = cl._pad_flat(flat, _pad_quantum(local, node, spec.wire_inter))
 
-    shard = lax.psum_scatter(flat, spec.local_axis, scatter_dimension=0,
-                             tiled=True)
-    shard, new_residual = cl.allreduce_ef(shard, residual,
-                                          (spec.node_axis,),
-                                          backend=spec.backend,
-                                          fused=spec.fused)
-    out = lax.all_gather(shard, spec.local_axis, axis=0, tiled=True)
+    with jax.named_scope(f"hier/intra_rs_{spec.wire_intra}"):
+        shard = lax.psum_scatter(flat, spec.local_axis, scatter_dimension=0,
+                                 tiled=True)
+    with jax.named_scope("hier/inter_allreduce_int8_ef"):
+        shard, new_residual = cl.allreduce_ef(shard, residual,
+                                              (spec.node_axis,),
+                                              backend=spec.backend,
+                                              fused=spec.fused)
+    with jax.named_scope(f"hier/intra_ag_{spec.wire_intra}"):
+        out = lax.all_gather(shard, spec.local_axis, axis=0, tiled=True)
 
     out = out[: x.size].reshape(x.shape).astype(orig_dtype)
     if mean:

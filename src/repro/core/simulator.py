@@ -53,6 +53,28 @@ class SimLayer:
     wgrad_bytes: float
 
 
+@dataclasses.dataclass(frozen=True)
+class SimSpan:
+    """One interval of the modeled timeline (``record_timeline=True``).
+
+    Times are seconds from iteration start. ``cat`` is "compute" (fwd/bwd
+    work), "comm" (the network servicing a transfer — a preempted priority
+    transfer yields one span per serviced segment), or "stall" (compute
+    waiting on an unfinished allreduce — the exposed time, per layer).
+    ``obs.trace.export_sim_spans`` turns these into Chrome-trace events.
+    """
+
+    name: str
+    cat: str                    # "compute" | "comm" | "stall"
+    start: float
+    end: float
+    layer: int = -1
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
 @dataclasses.dataclass
 class IterationStats:
     policy: Policy
@@ -61,7 +83,7 @@ class IterationStats:
     exposed_comm: float
     comm_busy: float            # seconds the link was transferring
     completion_times: list     # allreduce completion per layer index
-    timeline: list             # (event, t) tuples for debugging/plots
+    timeline: list             # SimSpan intervals (record_timeline=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,28 +187,41 @@ def _allreduce_durations(layers: Sequence[SimLayer], p: int, link: hw.Link,
     return out
 
 
-def _serve_fifo(jobs: Sequence[_Job]) -> list:
-    """Single network resource, service in ready (issue) order."""
+def _serve_fifo(jobs: Sequence[_Job]):
+    """Single network resource, service in ready (issue) order.
+
+    Returns (done, segments): per-job completion times plus the serviced
+    intervals as (job_index, start, end) — FIFO never preempts, so exactly
+    one segment per job.
+    """
     order = sorted(range(len(jobs)), key=lambda i: (jobs[i].ready, -jobs[i].layer))
     done = [0.0] * len(jobs)
+    segments = []
     t = 0.0
     for i in order:
-        t = max(t, jobs[i].ready) + jobs[i].duration
+        start = max(t, jobs[i].ready)
+        t = start + jobs[i].duration
         done[i] = t
-    return done
+        segments.append((i, start, t))
+    return done, segments
 
 
-def _serve_priority(jobs: Sequence[_Job]) -> list:
+def _serve_priority(jobs: Sequence[_Job]):
     """Preemptive priority service: lowest layer index first.
 
     Event-driven single-server simulation. When a more urgent job becomes
     ready, the in-flight transfer is preempted and resumed later with its
     remaining bytes intact (MLSL 'completes preempted operations in an
     optimal manner as and when they are required').
+
+    Returns (done, segments): per-job completion times plus the serviced
+    intervals as (job_index, start, end) — a preempted job contributes one
+    segment per serviced stretch.
     """
     n = len(jobs)
     remaining = [j.duration for j in jobs]
     done = [0.0] * n
+    segments = []
     arrivals = sorted(range(n), key=lambda i: jobs[i].ready)
     arrived: list = []          # layer-sorted list of not-yet-finished jobs
     t = 0.0
@@ -206,14 +241,17 @@ def _serve_priority(jobs: Sequence[_Job]) -> list:
         next_arrival = jobs[arrivals[ai]].ready if ai < n else float("inf")
         finish_at = t + remaining[cur]
         if finish_at <= next_arrival:
+            segments.append((cur, t, finish_at))
             t = finish_at
             done[cur] = t
             arrived.pop(0)
             finished += 1
         else:
+            if next_arrival > t:
+                segments.append((cur, t, next_arrival))
             remaining[cur] -= next_arrival - t
             t = next_arrival
-    return done
+    return done, segments
 
 
 def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
@@ -258,14 +296,25 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
                                      fused_quant=fused_quant)
     timeline = []
 
+    def span(name, cat, start, end, layer=-1):
+        if record_timeline and end > start:
+            timeline.append(SimSpan(name=name, cat=cat, start=start,
+                                    end=end, layer=layer))
+
     if policy is Policy.BLOCKING:
         t = 0.0
         done = [0.0] * n
         for i in range(n - 1, -1, -1):
+            span(f"bwd:{layers[i].name}", "compute", t,
+                 t + layers[i].bwd_time * slow, layer=i)
             t += layers[i].bwd_time * slow
+            span(f"allreduce:{layers[i].name}", "comm", t,
+                 t + durations[i], layer=i)
             t += durations[i]          # synchronous allreduce, no overlap
             done[i] = t
         for i in range(n):
+            span(f"fwd:{layers[i].name}", "compute", t,
+                 t + layers[i].fwd_time * slow, layer=i)
             t += layers[i].fwd_time * slow
         total = t
         return IterationStats(policy=policy, total_time=total,
@@ -278,22 +327,28 @@ def simulate_iteration(layers: Sequence[SimLayer], p: int, link: hw.Link,
     t = 0.0
     jobs = []
     for i in range(n - 1, -1, -1):
+        span(f"bwd:{layers[i].name}", "compute", t,
+             t + layers[i].bwd_time * slow, layer=i)
         t += layers[i].bwd_time * slow
         jobs.append(_Job(layer=i, ready=t, duration=durations[i]))
-        if record_timeline:
-            timeline.append((f"bwd_done:{layers[i].name}", t))
     bwd_end = t
     jobs = sorted(jobs, key=lambda j: j.layer)
     if policy is Policy.FIFO_OVERLAP:
-        done = _serve_fifo(jobs)
+        done, segments = _serve_fifo(jobs)
     else:
-        done = _serve_priority(jobs)
+        done, segments = _serve_priority(jobs)
+    for ji, start, end in segments:
+        span(f"allreduce:{layers[jobs[ji].layer].name}", "comm", start, end,
+             layer=jobs[ji].layer)
 
     t = bwd_end
     for i in range(n):
-        t = max(t, done[i]) + layers[i].fwd_time * slow
-        if record_timeline:
-            timeline.append((f"fwd_done:{layers[i].name}", t))
+        # fwd(i) waits on allreduce(i): the wait IS the exposed time
+        span(f"stall:{layers[i].name}", "stall", t, done[i], layer=i)
+        t = max(t, done[i])
+        span(f"fwd:{layers[i].name}", "compute", t,
+             t + layers[i].fwd_time * slow, layer=i)
+        t += layers[i].fwd_time * slow
     total = t
     return IterationStats(policy=policy, total_time=total,
                           compute_time=compute,
@@ -363,11 +418,13 @@ class BucketScheduleStats:
     compute_time: float          # n_micro * per-microbatch fwd+bwd
     exposed_comm: float          # total - compute
     comm_busy: float             # n_micro * sum(bucket service times)
+    timeline: tuple = ()         # SimSpan intervals (record_timeline=True)
 
 
 def simulate_bucket_schedule(bucket_times: Sequence[float], n_micro: int,
-                             micro_compute: float, *,
-                             overlap: bool) -> BucketScheduleStats:
+                             micro_compute: float, *, overlap: bool,
+                             record_timeline: bool = False
+                             ) -> BucketScheduleStats:
     """Estimate one step of the CommEngine's accumulation-scan exchange.
 
     Mirrors train.trainer exactly: every microbatch's buckets are reduced
@@ -381,22 +438,51 @@ def simulate_bucket_schedule(bucket_times: Sequence[float], n_micro: int,
 
     With ``n_micro == 1`` both schedules degrade to reduce-at-end and the
     full chain is exposed, matching the trainer's fallback.
+
+    ``record_timeline=True`` fills ``timeline`` with SimSpan intervals
+    (compute per microbatch, comm per bucket message, the end-of-step drain
+    as "stall") in the same span format as ``simulate_iteration`` —
+    ``obs.trace.export_sim_spans`` renders either.
     """
     comm_per_micro = float(sum(bucket_times))
     compute = n_micro * micro_compute
+    timeline = []
+
+    def span(name, cat, start, end, layer=-1):
+        if record_timeline and end > start:
+            timeline.append(SimSpan(name=name, cat=cat, start=start,
+                                    end=end, layer=layer))
+
     if not overlap or n_micro == 1:
+        # blocking: microbatch k+1's compute gates on k's reduction chain
+        t = 0.0
+        for k in range(n_micro):
+            span(f"micro{k}/compute", "compute", t, t + micro_compute)
+            t += micro_compute
+            for bi, bt in enumerate(bucket_times):
+                span(f"micro{k}/bucket{bi}", "comm", t, t + bt, layer=bi)
+                t += bt
         total = compute + n_micro * comm_per_micro
     else:
         t_link = 0.0
         for k in range(n_micro):
+            span(f"micro{k}/compute", "compute", k * micro_compute,
+                 (k + 1) * micro_compute)
             ready = (k + 1) * micro_compute    # bwd of microbatch k done
-            for t in bucket_times:
-                t_link = max(t_link, ready) + t
+            for bi, t in enumerate(bucket_times):
+                start = max(t_link, ready)
+                span(f"micro{k}/bucket{bi}", "comm", start, start + t,
+                     layer=bi)
+                t_link = start + t
         total = max(compute, t_link)
+        # only the chain's drain past the last microbatch's compute is
+        # exposed: that wait is the step's stall
+        span("drain", "stall", compute, t_link)
     return BucketScheduleStats(overlap=overlap, n_micro=n_micro,
                                total_time=total, compute_time=compute,
                                exposed_comm=total - compute,
-                               comm_busy=n_micro * comm_per_micro)
+                               comm_busy=n_micro * comm_per_micro,
+                               timeline=tuple(timeline))
 
 
 def layers_from_specs(specs, batch_per_node: int, chip: hw.Chip,

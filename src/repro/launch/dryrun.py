@@ -309,7 +309,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                with_block_cost: bool = True,
                fsdp_override: Optional[bool] = None,
                parallelism: str = "hybrid",
-               minipod: bool = False) -> dict:
+               minipod: bool = False,
+               comm_stats: bool = False) -> dict:
     cfg = registry.get_config(arch)
     shape = SHAPES[shape_name]
     comm = comm or tr.CommConfig()
@@ -346,6 +347,21 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec["fsdp"] = planner.fsdp
     rec["parallelism"] = parallelism
     rec["n_params"] = Model(cfg).n_params()
+
+    if comm_stats and comm.mode == "mlsl" and shape.kind == "train":
+        # the bucket plan is pure host math -- record the MLSL-style per-
+        # bucket wire stats (repro.obs.stats) alongside the roofline so the
+        # dry-run artifact says what each fused bucket would put on the wire
+        st = tr.make_comm_engine(Model(cfg), mesh, planner, comm).stats()
+        rec["comm_stats"] = {
+            "n_buckets": len(st.buckets),
+            "topo": st.topo_name,
+            "total_bytes": st.total_bytes,
+            "intra_bytes": st.intra_bytes,
+            "inter_bytes": st.inter_bytes,
+            "t_model_total_s": st.t_model_total,
+        }
+        print(st.table())
 
     fn, args = BUILDERS[shape.kind](cfg, shape, mesh, planner, comm)
     t0 = time.time()
@@ -409,6 +425,9 @@ def main():
     ap.add_argument("--kv-chunk", type=int, default=0)
     ap.add_argument("--parallelism", default="hybrid",
                     choices=["hybrid", "dp"])
+    # observability: with --comm mlsl, print + record the per-bucket
+    # CommStats table (repro.obs.stats) for each train combination
+    ap.add_argument("--stats", action="store_true")
     ap.add_argument("--tag", default="")
     ap.add_argument("--no-prioritize", action="store_true")
     ap.add_argument("--out", default="artifacts/dryrun")
@@ -454,7 +473,7 @@ def main():
         try:
             rec = dryrun_one(arch, shape, multi_pod=mp, comm=comm,
                              parallelism=args.parallelism,
-                             minipod=args.minipod)
+                             minipod=args.minipod, comm_stats=args.stats)
         except Exception as e:      # noqa: BLE001 -- record and continue
             rec = {"arch": arch, "shape": shape, "status": "failed",
                    "error": f"{type(e).__name__}: {e}",

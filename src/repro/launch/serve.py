@@ -8,6 +8,7 @@ devices (the full-config serving path is exercised by the dry-run).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -27,14 +28,29 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--long-context", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    # observability: --stats prints the decode step meter (EMA step time,
+    # tok/s); --trace DIR writes DIR/trace.json with prefill + per-decode-
+    # step spans (Perfetto-loadable). Both block per decode step to time it.
+    ap.add_argument("--stats", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="DIR")
     args = ap.parse_args()
+
+    meter = tracer = None
+    if args.stats or args.trace:
+        from repro.obs import meter as obs_meter
+        from repro.obs import trace as obs_trace
+        meter = obs_meter.StepMeter()
+        if args.trace:
+            tracer = obs_trace.TraceWriter()
+            tracer.name_process(0, "serve")
 
     cfg = registry.get_smoke_config(args.arch)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     eng = Engine(model, params, EngineConfig(
         max_seq=args.prompt_len + args.new_tokens + 8,
-        temperature=args.temperature, long_context=args.long_context))
+        temperature=args.temperature, long_context=args.long_context),
+        meter=meter, tracer=tracer)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab,
@@ -50,6 +66,12 @@ def main():
         print(f"req{i}: prompt_len={len(r.prompt)} -> {r.out[:8].tolist()}...")
     print(f"{total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s batched on CPU, reduced config)")
+    if args.stats and meter is not None and meter.steps:
+        print(f"decode {meter.summary()}")
+    if tracer is not None:
+        os.makedirs(args.trace, exist_ok=True)
+        path = tracer.write(os.path.join(args.trace, "trace.json"))
+        print(f"trace: {path} (open in https://ui.perfetto.dev)")
     return 0
 
 

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -71,6 +72,14 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    # observability (repro.obs): --stats prints the MLSL-style per-bucket
+    # CommStats table + step meter and writes them into the perf ledger
+    # (BENCH_comm_stats.json in $BENCH_DIR); --trace DIR writes a Chrome-
+    # trace JSON (DIR/trace.json, Perfetto-loadable) with measured step +
+    # per-bucket spans beside the modeled schedule for the same config.
+    # Both block on every step's result to time it (small overhead).
+    ap.add_argument("--stats", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="DIR")
     args = ap.parse_args()
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
@@ -109,6 +118,16 @@ def main():
     dcfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                global_batch=args.batch, seed=args.seed)
 
+    meter = tracer = None
+    if args.stats or args.trace:
+        from repro.obs import meter as obs_meter
+        from repro.obs import trace as obs_trace
+        meter = obs_meter.StepMeter(tokens_per_step=args.batch * args.seq)
+        if args.trace:
+            tracer = obs_trace.TraceWriter()
+            tracer.name_process(0, "measured")
+            tracer.name_thread(0, 0, "train steps")
+
     with compat.set_mesh(mesh):
         state = tr.make_train_state(model, optimizer,
                                     jax.random.PRNGKey(args.seed))
@@ -129,15 +148,107 @@ def main():
                     jnp.float32)
             batch = Batch(tokens=jnp.asarray(raw["tokens"]),
                           labels=jnp.asarray(raw["labels"]), **kw)
-            state, metrics = step_fn(state, batch)
+            if meter is not None:
+                # metering blocks on each step's result (async dispatch would
+                # attribute step k's time to k+1); span per step when tracing
+                meter.start()
+                if tracer is not None:
+                    with tracer.span(f"step{s}", cat="step"):
+                        state, metrics = step_fn(state, batch)
+                        jax.block_until_ready(metrics)
+                else:
+                    state, metrics = step_fn(state, batch)
+                    jax.block_until_ready(metrics)
+                meter.update(loss=float(metrics["loss"]),
+                             grad_norm=float(metrics["grad_norm"]))
+            else:
+                state, metrics = step_fn(state, batch)
             if s % args.log_every == 0 or s == args.steps - 1:
-                print(f"step {s:5d} loss {float(metrics['loss']):.4f} "
-                      f"gnorm {float(metrics['grad_norm']):.3f} "
-                      f"({time.time() - t0:.1f}s)", flush=True)
+                if meter is not None:
+                    print(f"{meter.summary()} ({time.time() - t0:.1f}s)",
+                          flush=True)
+                else:
+                    print(f"step {s:5d} loss {float(metrics['loss']):.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"({time.time() - t0:.1f}s)", flush=True)
+        if meter is not None or tracer is not None:
+            _emit_observability(args, mesh, planner, comm, model, meter,
+                                tracer)
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, {"params": state.params}, step=args.steps)
         print(f"checkpoint -> {args.ckpt_dir}")
     return 0
+
+
+def _emit_observability(args, mesh, planner, comm, model, meter, tracer):
+    """Post-run stats/trace emission (--stats / --trace).
+
+    For the mlsl data path: replay each bucket's exchange standalone to get
+    measured per-bucket service times, print the CommStats table, write the
+    comm_stats entries into the perf ledger (BENCH_comm_stats.json — all
+    informational/unstable, never gated), and lay measured per-bucket spans
+    plus the MODELED bucket schedule for the same config side by side in
+    the trace so Perfetto shows measured-vs-modeled in one view.
+    """
+    from repro.core import simulator as sim
+    from repro.obs import stats as obs_stats
+    from repro.obs import trace as obs_trace
+
+    st = None
+    if args.comm == "mlsl":
+        engine = tr.make_comm_engine(model, mesh, planner, comm)
+        measured = obs_stats.measure_bucket_times(engine, mesh, iters=2)
+        st = engine.stats(measured=measured)
+        if tracer is not None:
+            tracer.name_thread(0, 1, "bucket replay")
+            t_us = tracer.now_us()
+            for b in st.buckets:
+                dur = (b.t_measured or 0.0) * 1e6
+                tracer.complete(
+                    f"bucket{b.index}/{b.route}_allreduce_{b.wire}",
+                    t_us, dur, pid=0, tid=1, cat="comm",
+                    args={"elems": b.n_elems, "total_B": b.total_bytes})
+                t_us += dur
+        # the modeled schedule for this config: per-bucket cost-model times
+        # through the engine's own microbatch pipeline, at the measured
+        # compute scale when a meter ran
+        n_micro = max(comm.accum_steps, 1)
+        micro_compute = (meter.step_time / n_micro
+                         if meter is not None and meter.steps else 1e-3)
+        modeled = sim.simulate_bucket_schedule(
+            [b.t_model or 0.0 for b in st.buckets], n_micro, micro_compute,
+            overlap=comm.overlap, record_timeline=True)
+        if meter is not None:
+            meter.exposed_comm_model = modeled.exposed_comm
+        if tracer is not None:
+            obs_trace.export_sim_spans(modeled.timeline, tracer, pid=1,
+                                       track=f"modeled ({st.topo_name})")
+        if args.stats:
+            print(st.table())
+    elif args.stats:
+        print("stats: per-bucket CommStats need --comm mlsl (gspmd's "
+              "reductions are partitioner-inserted, not bucket messages)")
+    if args.stats and meter is not None and meter.steps:
+        print(meter.summary())
+
+    if args.stats:
+        try:
+            from benchmarks import common as bench_common
+        except ImportError:
+            bench_common = None     # repo root not on sys.path
+        if bench_common is not None:
+            led = bench_common.Ledger("comm_stats")
+            for m in (st.to_metrics() if st is not None else []):
+                led.record(**m)
+            if meter is not None and meter.steps:
+                for m in meter.to_metrics():
+                    led.record(**m)
+            print(f"stats ledger: {led.write()}")
+
+    if tracer is not None:
+        os.makedirs(args.trace, exist_ok=True)
+        path = tracer.write(os.path.join(args.trace, "trace.json"))
+        print(f"trace: {path} (open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

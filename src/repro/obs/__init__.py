@@ -1,0 +1,21 @@
+"""Observability: MLSL-style comm stats, Chrome-trace timelines, step meter.
+
+MLSL's proof points (paper §4) are per-message statistics — bytes, algorithm,
+exposed vs overlapped time — that only the library owning the exchange can
+produce. This subpackage is that accounting layer for the reproduction:
+
+  repro.obs.trace  -- Chrome-trace-event (Perfetto-compatible) writer with
+                      host-side span helpers and an exporter for the
+                      simulator's modeled span timeline, so a measured mesh
+                      run and a modeled iteration open side by side in one
+                      Perfetto view.
+  repro.obs.stats  -- CommStats: the per-bucket wire-byte / route / modeled-
+                      vs-measured-time report derived from an EnginePlan
+                      (surfaced as EnginePlan.describe() / CommEngine.stats()
+                      and serialized into the perf-ledger schema).
+  repro.obs.meter  -- StepMeter: step-time EMA, tokens/sec, loss/grad-norm
+                      tracking for the train/serve drivers (--stats).
+
+Layering: trace.py depends on nothing in repro (core modules may import it);
+stats.py sits ABOVE repro.core (core reaches it only through lazy imports).
+"""

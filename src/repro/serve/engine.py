@@ -7,6 +7,7 @@ simple batched-request front end used by examples/serve_batched.py.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional
 
@@ -26,10 +27,17 @@ class EngineConfig:
 
 
 class Engine:
-    def __init__(self, model: Model, params, cfg: EngineConfig | None = None):
+    def __init__(self, model: Model, params, cfg: EngineConfig | None = None,
+                 *, meter=None, tracer=None):
+        """`meter` (obs.meter.StepMeter) / `tracer` (obs.trace.TraceWriter)
+        optionally instrument the host loop: a "prefill" span plus one span
+        and one meter step per decode step. Instrumentation blocks on each
+        step's result to time it — leave both None on the fast path."""
         self.model = model
         self.params = params
         self.cfg = cfg or EngineConfig()
+        self.meter = meter
+        self.tracer = tracer
         ctx_kw = {}
         if self.cfg.long_context and model.cfg.arch_type in ("dense", "moe",
                                                              "vlm"):
@@ -41,6 +49,11 @@ class Engine:
             lambda p, b: model.prefill(p, b, self.cfg.max_seq, **ctx_kw))
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos, **ctx_kw))
+
+    def _span(self, name: str):
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, cat="serve")
 
     def _sample(self, logits: jax.Array, key: jax.Array) -> jax.Array:
         if self.cfg.temperature <= 0.0:
@@ -58,7 +71,11 @@ class Engine:
                       else jnp.asarray(img_embeds),
                       frame_embeds=None if frame_embeds is None
                       else jnp.asarray(frame_embeds))
-        logits, cache, pos = self._prefill(self.params, batch)
+        instrumented = self.meter is not None or self.tracer is not None
+        with self._span("prefill"):
+            logits, cache, pos = self._prefill(self.params, batch)
+            if instrumented:
+                jax.block_until_ready(logits)
         if self.model.cfg.vlm_img_tokens and img_embeds is not None:
             pos = pos  # pos already counts image tokens via embed concat
         key = jax.random.PRNGKey(seed)
@@ -67,9 +84,16 @@ class Engine:
         for i in range(n_new):
             out.append(np.asarray(tok))
             key, sub = jax.random.split(key)
-            logits, cache = self._decode(self.params, cache, tok[:, None],
-                                         jnp.int32(pos + i))
-            tok = self._sample(logits, sub)
+            if self.meter is not None:
+                self.meter.start()
+            with self._span(f"decode/{i}"):
+                logits, cache = self._decode(self.params, cache, tok[:, None],
+                                             jnp.int32(pos + i))
+                tok = self._sample(logits, sub)
+                if instrumented:
+                    jax.block_until_ready(tok)
+            if self.meter is not None:
+                self.meter.update(tokens=B)
         return np.stack(out, axis=1)
 
 

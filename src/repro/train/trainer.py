@@ -336,7 +336,11 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
         # the two schedules bit-identical, not just close.
         mb0 = jax.tree_util.tree_map(lambda x: x[0], micro)
         rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
-        loss0, g0 = jax.value_and_grad(loss_fn)(params, mb0)
+        # named scopes (profile attribution only) are applied SYMMETRICALLY
+        # across the blocking and overlap schedules — matched call sites are
+        # part of the bit-identity contract above
+        with jax.named_scope("microbatch/fwd_bwd"):
+            loss0, g0 = jax.value_and_grad(loss_fn)(params, mb0)
 
         if not comm.overlap:
             # blocking baseline: reduce each microbatch's buckets before the
@@ -345,8 +349,9 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
             # every bucket's accumulator instead — blocking must not
             # silently weaken under prioritize=False.
             def exchange(g, bacc, res, token):
-                bacc, res, token = engine.reduce_accum_chained(
-                    _to_f32(g), bacc, res, token)
+                with jax.named_scope("microbatch/exchange"):
+                    bacc, res, token = engine.reduce_accum_chained(
+                        _to_f32(g), bacc, res, token)
                 if not comm.prioritize:
                     token = engine.gate_token_accum(bacc)
                 return bacc, res, token
@@ -357,7 +362,8 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
             def body(carry, mb):
                 bacc, lsum, res, token = carry
                 mb, token = scheduler.chain_barrier(mb, token)
-                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                with jax.named_scope("microbatch/fwd_bwd"):
+                    loss, g = jax.value_and_grad(loss_fn)(params, mb)
                 bacc, res, token = exchange(g, bacc, res, token)
                 return (bacc, lsum + loss, res, token), None
 
@@ -371,16 +377,19 @@ def make_train_step(model: Model, optimizer: opt_lib.Optimizer, mesh: Mesh,
             # epilogue drains the last microbatch
             def body(carry, mb):
                 bacc, lsum, pending, res, token = carry
-                loss, g = jax.value_and_grad(loss_fn)(params, mb)
-                bacc, res, token = engine.reduce_accum_chained(
-                    pending, bacc, res, token)
+                with jax.named_scope("microbatch/fwd_bwd"):
+                    loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                with jax.named_scope("microbatch/exchange"):
+                    bacc, res, token = engine.reduce_accum_chained(
+                        pending, bacc, res, token)
                 return (bacc, lsum + loss, _to_f32(g), res, token), None
 
             (bacc, lsum, pending, residuals, token), _ = compat.maybe_scan(
                 body, (engine.init_accum(), loss0, _to_f32(g0), residuals,
                        token0), rest, unroll=unroll_scans)
-            bacc, residuals, _ = engine.reduce_accum_chained(
-                pending, bacc, residuals, token)
+            with jax.named_scope("microbatch/exchange"):
+                bacc, residuals, _ = engine.reduce_accum_chained(
+                    pending, bacc, residuals, token)
 
         gsum = engine.unfuse_accum(bacc)
         grads = jax.tree_util.tree_map(
