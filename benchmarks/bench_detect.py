@@ -1,0 +1,197 @@
+"""Detector precision/recall against labeled simulated fault episodes (C10).
+
+PR 6's fault harness (simulator.FaultSpec) can produce exactly the failures
+the health monitor (repro.obs.detect) must catch — so it doubles as labeled
+ground truth. Each episode replays a deterministic simulated run
+(simulator.generate_episode: healthy warm-up, fault onset at a known step,
+2% deterministic jitter from an inline LCG — no numpy RNG, so the stream is
+bit-stable across library versions) through a fresh HealthMonitor and
+scores the alarms against the label:
+
+  * correct    -- the expected alarm kind (and level, for link faults) at or
+                  after the labeled onset;
+  * incorrect  -- any alarm on a clean episode, a wrong kind/level, or an
+                  alarm before onset (warm-up must never fire).
+
+The headline metrics are STABLE AND GATED — the detector gets the same
+regression protection the cost model has:
+
+  detect/precision             >= 0.9 required (gated, higher-better)
+  detect/recall                >= 0.9 required (gated, higher-better)
+  detect/clean_false_positives == 0  required (gated, lower-better)
+  detect/factor_relerr_max     gated, lower-better: worst relative error of
+                               the alarm's degradation-factor estimate vs
+                               the injected factor across detected episodes.
+
+Episode notes: link-level discrimination lives in how small latency-bound
+buckets and bulk volume-bound buckets drift *differently* per level, so the
+intra-fault episode pins an all-hier plan on `cloud-virtio-sriov` (where
+intra carries ~80% of hier volume — a strong signature); the routed plans
+on that topology keep bulk flat on the healthy fabric, which is exactly why
+an intra hypothesis cannot mimic an inter fault there. The no-sampling
+episode checks the step_time_drift fallback (bucket replay disabled).
+
+Pure simulator + detector — no jax needed:
+
+  PYTHONPATH=src:. python benchmarks/bench_detect.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import common
+from repro.core import planner as planner_lib
+from repro.core import simulator as sim
+from repro.obs import detect, telemetry
+
+# synthetic gradient-bucket footprint: three bulk buckets, a mid bucket,
+# and a latency-bound tail (bytes) — the shape scheduler.greedy_buckets
+# produces for a transformer stack
+BUCKET_BYTES = (25e6, 25e6, 25e6, 12e6, 4e6, 1e6, 0.25e6)
+
+EpisodeCase = tuple  # (EpisodeSpec, algos_mode, expected_level)
+
+
+def _episodes(smoke: bool) -> list:
+    """(spec, algos_mode) cases; algos_mode "routed" uses the planner's
+    per-bucket flat/hier choice on the episode topology, "hier" pins the
+    all-hierarchical plan (the intra-discrimination case)."""
+    F = sim.FaultSpec
+    eps = [
+        (sim.EpisodeSpec(name="clean", label="clean"), "routed"),
+        (sim.EpisodeSpec(name="straggler_1p5x", label="straggler",
+                         fault=F(straggler_slowdown=1.5), seed=2), "routed"),
+        (sim.EpisodeSpec(name="degraded_inter_0p4", label="link_degraded",
+                         level="inter", fault=F(inter_bw_factor=0.4),
+                         seed=4), "routed"),
+    ]
+    if smoke:
+        return eps
+    eps += [
+        (sim.EpisodeSpec(name="clean_hier", label="clean", seed=1), "hier"),
+        (sim.EpisodeSpec(name="straggler_2x", label="straggler",
+                         fault=F(straggler_slowdown=2.0), seed=3), "routed"),
+        (sim.EpisodeSpec(name="degraded_inter_0p6", label="link_degraded",
+                         level="inter", fault=F(inter_bw_factor=0.6),
+                         seed=5), "routed"),
+        (sim.EpisodeSpec(name="hetero_links", label="link_degraded",
+                         level="inter",
+                         fault=F(hetero_link_bw_factors=(1.0, 0.6, 0.9)),
+                         seed=6), "routed"),
+        (sim.EpisodeSpec(name="congested_intra", label="link_degraded",
+                         level="intra", fault=F(intra_bw_factor=0.25),
+                         seed=7), "hier"),
+        (sim.EpisodeSpec(name="drift_nosample", label="step_time_drift",
+                         fault=F(straggler_slowdown=1.8), sample_every=0,
+                         seed=8), "routed"),
+    ]
+    return eps
+
+
+def _algos(spec, mode: str) -> tuple:
+    if mode == "hier":
+        return tuple("hier" for _ in BUCKET_BYTES)
+    topo = sim.hw.TOPOLOGIES[spec.topo_name]
+    return tuple(
+        planner_lib.choose_allreduce_algo(b, spec.nodes, topo)
+        for b in BUCKET_BYTES)
+
+
+_EXPECTED_KIND = {
+    "straggler": detect.ALARM_STRAGGLER,
+    "link_degraded": detect.ALARM_LINK_DEGRADED,
+    "step_time_drift": detect.ALARM_STEP_DRIFT,
+}
+
+
+def _score(spec, alarms) -> dict:
+    """Classify one episode's alarms against its label."""
+    expected = _EXPECTED_KIND.get(spec.label)
+    correct = []
+    incorrect = []
+    for a in alarms:
+        ok = (expected is not None and a.kind == expected
+              and a.step >= spec.onset
+              and (spec.label != "link_degraded" or a.level == spec.level))
+        (correct if ok else incorrect).append(a)
+    return {"correct": correct, "incorrect": incorrect}
+
+
+def run(smoke: bool = False):
+    led = common.current_ledger()
+    n_correct = n_incorrect = 0
+    n_faulty = n_detected = 0
+    clean_fp = 0
+    relerr_max = 0.0
+
+    for spec, mode in _episodes(smoke):
+        algos = _algos(spec, mode)
+        events = sim.generate_episode(spec, BUCKET_BYTES, algos)
+        telemetry.validate_telemetry(events)   # the schema contract, always
+        mon = detect.HealthMonitor(
+            bucket_bytes=BUCKET_BYTES, algos=algos, nodes=spec.nodes,
+            topo=spec.topo_name)
+        mon.replay(events)
+        sc = _score(spec, mon.alarms)
+        correct, incorrect = sc["correct"], sc["incorrect"]
+        n_correct += len(correct)
+        n_incorrect += len(incorrect)
+        if spec.label == "clean":
+            clean_fp += len(mon.alarms)
+        else:
+            n_faulty += 1
+            if correct:
+                n_detected += 1
+                est = correct[0].factor
+                true = spec.true_factor
+                relerr = abs(est - true) / max(abs(true), 1e-9)
+                relerr_max = max(relerr_max, relerr)
+
+        first = correct[0] if correct else (
+            mon.alarms[0] if mon.alarms else None)
+        reroute = ""
+        if correct:
+            reroute = mon.reroute(correct[0]).summary()
+        fields = [
+            f"label={spec.label or 'clean'}",
+            f"expected={_EXPECTED_KIND.get(spec.label, 'none')}",
+            f"alarm_kind={first.kind if first else 'none'}",
+            f"alarm_level={first.level if first and first.level else '-'}",
+            f"first_alarm_step={first.step if first else -1}",
+            f"onset={spec.onset}",
+            f"factor_true={spec.true_factor:.2f}",
+            f"factor_est={first.factor:.3f}" if first else "factor_est=-1",
+            f"n_alarms={len(mon.alarms)}",
+        ]
+        if reroute and led is not None:
+            led.record(f"detect/ep/{spec.name}/reroute", reroute)
+        common.emit(f"detect/ep/{spec.name}", 0.0, ";".join(fields))
+
+    precision = (n_correct / (n_correct + n_incorrect)
+                 if (n_correct + n_incorrect) else 1.0)
+    recall = n_detected / n_faulty if n_faulty else 1.0
+    if led is not None:
+        led.record("detect/precision", precision, better="higher",
+                   stable=True)
+        led.record("detect/recall", recall, better="higher", stable=True)
+        led.record("detect/clean_false_positives", float(clean_fp),
+                   better="lower", stable=True)
+        led.record("detect/factor_relerr_max", relerr_max, better="lower",
+                   stable=True)
+    print(f"detect/summary,0.000,precision={precision:.3f};"
+          f"recall={recall:.3f};clean_false_positives={clean_fp};"
+          f"factor_relerr_max={relerr_max:.3f}")
+    assert precision >= 0.9, f"precision {precision:.3f} < 0.9"
+    assert recall >= 0.9, f"recall {recall:.3f} < 0.9"
+    assert clean_fp == 0, f"{clean_fp} clean-episode false positives"
+    return {"precision": precision, "recall": recall, "clean_fp": clean_fp}
+
+
+def main():
+    common.run_with_ledger("bench_detect",
+                           lambda: run(smoke="--smoke" in sys.argv))
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,8 @@
   bench_overlap        -- CommEngine overlap: measured vs modeled exposed comm
   bench_collectives    -- collectives-API microbench + modeled pod times
   bench_roofline       -- roofline terms from the dry-run artifacts
+  bench_detect         -- health-monitor precision/recall on labeled
+                          simulated fault episodes (gated)
 
 Prints ``name,us_per_call,derived`` CSV, and writes one perf-ledger artifact
 ``BENCH_<module>.json`` per module (plus an aggregate ``BENCH_index.json``)
@@ -21,12 +23,12 @@ import os
 import sys
 import traceback
 
-from benchmarks import (bench_collectives, bench_overlap,
+from benchmarks import (bench_collectives, bench_detect, bench_overlap,
                         bench_prioritization, bench_quantization,
                         bench_roofline, bench_scaling, common)
 
 MODULES = [bench_prioritization, bench_scaling, bench_quantization,
-           bench_overlap, bench_collectives, bench_roofline]
+           bench_overlap, bench_collectives, bench_roofline, bench_detect]
 
 
 def main() -> None:

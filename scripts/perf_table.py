@@ -136,18 +136,57 @@ def render_comm_stats(metrics):
     return lines
 
 
+_EP_COLS = ("label", "expected", "alarm_kind", "alarm_level",
+            "first_alarm_step", "onset", "factor_true", "factor_est",
+            "n_alarms", "reroute")
+_EP_HEADER = ("| episode | " + " | ".join(_EP_COLS) + " |\n"
+              "|---|" + "---|" * len(_EP_COLS))
+
+
+def _detect_episodes(metrics):
+    """{episode: {field: value}} for ``detect/ep/<episode>/<field>`` metric
+    names (the per-episode rows bench_detect writes)."""
+    eps = {}
+    for m in metrics:
+        parts = m["name"].split("/")
+        if len(parts) != 4 or parts[0] != "detect" or parts[1] != "ep":
+            continue
+        eps.setdefault(parts[2], {})[parts[3]] = m["value"]
+    return eps
+
+
+def render_detect_episodes(metrics):
+    """Per-episode alarm table for a module's ``detect/ep/*`` entries
+    (bench_detect's labeled fault replays). Presentation regrouping only —
+    the gated headline metrics (detect/precision etc.) stay in the flat
+    table and the diff machinery is untouched."""
+    eps = _detect_episodes(metrics)
+    if not eps:
+        return []
+    lines = ["#### detect episodes\n", _EP_HEADER]
+    for key in sorted(eps):
+        row_vals = [_fmt_value(eps[key].get(c, "")) for c in _EP_COLS]
+        lines.append(f"| {key} | " + " | ".join(row_vals) + " |")
+    lines.append("")
+    return lines
+
+
 def render(ledgers):
     lines = []
     for module, rec in sorted(ledgers.items()):
         sha = (rec.get("git_sha") or "")[:12]
         lines.append(f"### {module}"
                      + (f"  (`{sha}`)" if sha else "") + "\n")
-        # comm_stats/<bucket>/<field> entries regroup into a per-bucket
-        # table; everything else renders as the flat metric listing
-        comm_names = {f"comm_stats/{b}/{f}"
-                      for b, fields in _comm_stats_buckets(
-                          rec["metrics"]).items() for f in fields}
-        flat = [m for m in rec["metrics"] if m["name"] not in comm_names]
+        # comm_stats/<bucket>/<field> and detect/ep/<episode>/<field>
+        # entries regroup into their own tables; everything else renders as
+        # the flat metric listing
+        grouped = {f"comm_stats/{b}/{f}"
+                   for b, fields in _comm_stats_buckets(
+                       rec["metrics"]).items() for f in fields}
+        grouped |= {f"detect/ep/{e}/{f}"
+                    for e, fields in _detect_episodes(
+                        rec["metrics"]).items() for f in fields}
+        flat = [m for m in rec["metrics"] if m["name"] not in grouped]
         if flat:
             lines.append(_TABLE_HEADER)
             for m in flat:
@@ -157,6 +196,7 @@ def render(ledgers):
                     f" {'yes' if m.get('stable', True) else 'no'} |")
             lines.append("")
         lines.extend(render_comm_stats(rec["metrics"]))
+        lines.extend(render_detect_episodes(rec["metrics"]))
     return "\n".join(lines)
 
 

@@ -568,3 +568,12 @@ class CommEngine:
         from repro.obs import stats as obs_stats
         return obs_stats.CommStats.from_plan(self.plan, measured=measured,
                                              topo=topo)
+
+    def bucket_timer(self, mesh, *, seed: int = 0):
+        """Compile-once per-bucket replay of this engine's reduce path
+        (repro.obs.stats.BucketTimer). Building it jits one region per
+        bucket; each ``sample()`` afterwards is cheap enough for the
+        telemetry loop to run between steps every N steps. Lazy import
+        keeps core independent of obs."""
+        from repro.obs import stats as obs_stats
+        return obs_stats.BucketTimer(self, mesh, seed=seed)

@@ -485,6 +485,159 @@ def simulate_bucket_schedule(bucket_times: Sequence[float], n_micro: int,
                                timeline=tuple(timeline))
 
 
+# --------------------------------------------------------------------------
+# labeled fault episodes (ground truth for the health monitor, PR 10)
+# --------------------------------------------------------------------------
+
+class _DetJitter:
+    """Tiny deterministic multiplicative-noise stream (64-bit LCG).
+
+    The detector benchmark gates precision/recall as STABLE ledger metrics,
+    so episode noise must be bit-reproducible across hosts and library
+    versions — numpy's generator streams are not guaranteed stable across
+    numpy releases, a plain LCG on Python ints is.
+    """
+
+    _A = 6364136223846793005
+    _C = 1442695040888963407
+    _M = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self._s = ((seed ^ 0x9E3779B97F4A7C15) * self._A + self._C) & self._M
+
+    def uniform(self) -> float:
+        """One draw in [-1, 1)."""
+        self._s = (self._A * self._s + self._C) & self._M
+        return (self._s >> 11) / float(1 << 53) * 2.0 - 1.0
+
+    def factor(self, amplitude: float) -> float:
+        """A multiplicative jitter factor in [1 - amplitude, 1 + amplitude)."""
+        return 1.0 + amplitude * self.uniform()
+
+
+@dataclasses.dataclass(frozen=True)
+class EpisodeSpec:
+    """One deterministic simulated fault episode (telemetry ground truth).
+
+    ``label`` names the alarm the health monitor SHOULD raise ("clean" for
+    none): the episode generator replays ``n_steps`` of the engine's bucket
+    schedule on ``topo_name``, composing ``fault`` onto the topology from
+    ``onset`` onward, and emits records in the telemetry schema
+    (repro.obs.telemetry) — so the detector consumes one format whether the
+    stream came from a live run or from this generator.
+
+    ``sample_every`` mirrors the driver's bucket-replay sampling knob
+    (0 disables bucket_times records entirely — the no-sampling regime where
+    only the generic ``step_time_drift`` alarm is reachable).
+    """
+
+    name: str
+    label: str                    # "clean"|"straggler"|"link_degraded"|
+                                  # "step_time_drift"
+    fault: FaultSpec = HEALTHY_FAULT
+    level: str = ""               # expected link level: "inter" | "intra"
+    topo_name: str = "cloud-virtio-sriov"
+    nodes: int = 16
+    n_steps: int = 60
+    onset: int = 20
+    sample_every: int = 5
+    n_micro: int = 4
+    micro_compute: float = 0.2    # seconds of healthy compute per microbatch
+    overlap: bool = True
+    tokens_per_step: float = 8192.0
+    jitter: float = 0.02          # multiplicative measurement noise amplitude
+    seed: int = 0
+
+    @property
+    def true_factor(self) -> float:
+        """The injected degradation factor the detector should estimate, in
+        ``hw.Topology.degrade`` convention (straggler >= 1, link bw <= 1)."""
+        if self.label == "link_degraded" and self.level == "intra":
+            return self.fault.intra_bw_factor
+        if self.label == "link_degraded":
+            return self.fault.worst_inter_bw_factor
+        if self.label in ("straggler", "step_time_drift"):
+            return self.fault.compute_slowdown
+        return 1.0
+
+
+def bucket_service_times(bucket_bytes: Sequence[float], algos,
+                          nodes: int, topo: hw.Topology, *,
+                          wire: str = "fp32", ef: bool = False,
+                          fused_quant: bool = True) -> list:
+    """Per-bucket allreduce seconds under each bucket's routed algorithm —
+    the same hw cost calls as planner.bucket_allreduce_times, inlined here
+    so the simulator never imports the planner (which lazily imports this
+    module)."""
+    out = []
+    for nbytes, algo in zip(bucket_bytes, algos):
+        if algo == "hier":
+            out.append(hw.hier_allreduce_time(nbytes, nodes, topo,
+                                              wire_inter=wire, ef=ef,
+                                              fused_quant=fused_quant))
+        else:
+            out.append(hw.flat_allreduce_time(nbytes, nodes, topo, wire=wire,
+                                              ef=ef, fused_quant=fused_quant))
+    return out
+
+
+def generate_episode(spec: EpisodeSpec, bucket_bytes: Sequence[float],
+                     algos: Sequence[str], *, wire: str = "fp32",
+                     ef: bool = False, fused_quant: bool = True) -> list:
+    """Replay one labeled fault episode; returns telemetry-schema records.
+
+    Each step runs the engine's bucket schedule (simulate_bucket_schedule)
+    with per-bucket service times costed on the healthy topology before
+    ``spec.onset`` and on ``spec.fault.apply_to_topology(topo)`` after; a
+    straggler stretches the per-microbatch compute. Measured values carry a
+    small deterministic multiplicative jitter (``_DetJitter``) so the
+    detector's robust statistics are exercised, while the stream stays
+    bit-reproducible for the gated precision/recall ledger.
+
+    The first record is a ``meta`` dict (schema_version 1) whose ``run``
+    block carries the ground-truth label/onset/factor — the benchmark's
+    scoring key. ``repro.obs.telemetry.validate_telemetry`` accepts the
+    output verbatim (covered by tests/test_detect.py).
+    """
+    topo = hw.TOPOLOGIES[spec.topo_name]
+    jit = _DetJitter(spec.seed)
+    healthy = bucket_service_times(bucket_bytes, algos, spec.nodes, topo,
+                                    wire=wire, ef=ef, fused_quant=fused_quant)
+    degraded_topo = spec.fault.apply_to_topology(topo)
+    degraded = bucket_service_times(bucket_bytes, algos, spec.nodes,
+                                     degraded_topo, wire=wire, ef=ef,
+                                     fused_quant=fused_quant)
+    records = [{
+        "kind": "meta", "schema_version": 1, "created_unix": 0.0,
+        "sample_every": spec.sample_every,
+        "run": {"source": "simulator", "episode": spec.name,
+                "label": spec.label, "level": spec.level,
+                "topo": spec.topo_name, "nodes": spec.nodes,
+                "onset": spec.onset, "true_factor": spec.true_factor,
+                "n_buckets": len(list(bucket_bytes))},
+    }]
+    for step in range(spec.n_steps):
+        active = step >= spec.onset
+        base = degraded if active else healthy
+        slow = spec.fault.compute_slowdown if active else 1.0
+        times = [t * jit.factor(spec.jitter) for t in base]
+        mc = spec.micro_compute * slow * jit.factor(spec.jitter)
+        st = simulate_bucket_schedule(times, spec.n_micro, mc,
+                                      overlap=spec.overlap)
+        if spec.sample_every > 0 and step % spec.sample_every == 0:
+            records.append({"kind": "bucket_times", "step": step,
+                            "measured": times, "modeled": list(healthy)})
+        exposed = (st.exposed_comm / st.total_time
+                   if st.total_time > 0 else 0.0)
+        records.append({
+            "kind": "step", "step": step, "t_step_s": st.total_time,
+            "tok_s": (spec.tokens_per_step / st.total_time
+                      if st.total_time > 0 else 0.0),
+            "exposed_frac": exposed,
+        })
+    return records
+
+
 def layers_from_specs(specs, batch_per_node: int, chip: hw.Chip,
                       bytes_per_elem: float = 4.0) -> list:
     """Turn c2c.LayerSpec shapes into SimLayers using a chip compute model."""

@@ -310,7 +310,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                fsdp_override: Optional[bool] = None,
                parallelism: str = "hybrid",
                minipod: bool = False,
-               comm_stats: bool = False) -> dict:
+               comm_stats: bool = False,
+               telemetry_path: Optional[str] = None) -> dict:
     cfg = registry.get_config(arch)
     shape = SHAPES[shape_name]
     comm = comm or tr.CommConfig()
@@ -348,20 +349,37 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec["parallelism"] = parallelism
     rec["n_params"] = Model(cfg).n_params()
 
-    if comm_stats and comm.mode == "mlsl" and shape.kind == "train":
+    if (comm_stats or telemetry_path) and comm.mode == "mlsl" \
+            and shape.kind == "train":
         # the bucket plan is pure host math -- record the MLSL-style per-
         # bucket wire stats (repro.obs.stats) alongside the roofline so the
         # dry-run artifact says what each fused bucket would put on the wire
         st = tr.make_comm_engine(Model(cfg), mesh, planner, comm).stats()
-        rec["comm_stats"] = {
-            "n_buckets": len(st.buckets),
-            "topo": st.topo_name,
-            "total_bytes": st.total_bytes,
-            "intra_bytes": st.intra_bytes,
-            "inter_bytes": st.inter_bytes,
-            "t_model_total_s": st.t_model_total,
-        }
-        print(st.table())
+        if comm_stats:
+            rec["comm_stats"] = {
+                "n_buckets": len(st.buckets),
+                "topo": st.topo_name,
+                "total_bytes": st.total_bytes,
+                "intra_bytes": st.intra_bytes,
+                "inter_bytes": st.inter_bytes,
+                "t_model_total_s": st.t_model_total,
+            }
+            print(st.table())
+        if telemetry_path:
+            # healthy modeled baseline card in the telemetry schema: a live
+            # run at this config can hand these bucket_times to the health
+            # monitor (obs.detect) as the measured-vs-modeled denominator
+            from repro.obs import telemetry as obs_telemetry
+            with obs_telemetry.TelemetryWriter(
+                    telemetry_path,
+                    run_info={"source": "dryrun", "arch": arch,
+                              "shape": shape_name, "mesh": mesh_name,
+                              "topo": st.topo_name,
+                              "n_buckets": len(st.buckets)},
+                    sample_every=0) as tel:
+                tel.bucket_times(
+                    0, modeled=[b.t_model or 0.0 for b in st.buckets])
+            rec["telemetry"] = telemetry_path
 
     fn, args = BUILDERS[shape.kind](cfg, shape, mesh, planner, comm)
     t0 = time.time()
@@ -426,8 +444,11 @@ def main():
     ap.add_argument("--parallelism", default="hybrid",
                     choices=["hybrid", "dp"])
     # observability: with --comm mlsl, print + record the per-bucket
-    # CommStats table (repro.obs.stats) for each train combination
+    # CommStats table (repro.obs.stats) for each train combination;
+    # --telemetry DIR additionally writes DIR/<tag>.telemetry.jsonl — the
+    # modeled-only bucket_times baseline card in the telemetry schema
     ap.add_argument("--stats", action="store_true")
+    ap.add_argument("--telemetry", default=None, metavar="DIR")
     ap.add_argument("--tag", default="")
     ap.add_argument("--no-prioritize", action="store_true")
     ap.add_argument("--out", default="artifacts/dryrun")
@@ -452,6 +473,8 @@ def main():
         combos = [(args.arch, args.shape, mp) for mp in meshes]
 
     os.makedirs(args.out, exist_ok=True)
+    if args.telemetry:
+        os.makedirs(args.telemetry, exist_ok=True)
     n_ok = n_skip = n_fail = 0
     for arch, shape, mp in combos:
         mesh_tag = ("minipod8x8" if args.minipod
@@ -473,7 +496,11 @@ def main():
         try:
             rec = dryrun_one(arch, shape, multi_pod=mp, comm=comm,
                              parallelism=args.parallelism,
-                             minipod=args.minipod, comm_stats=args.stats)
+                             minipod=args.minipod, comm_stats=args.stats,
+                             telemetry_path=(os.path.join(
+                                 args.telemetry,
+                                 tag + ".telemetry.jsonl")
+                                 if args.telemetry else None))
         except Exception as e:      # noqa: BLE001 -- record and continue
             rec = {"arch": arch, "shape": shape, "status": "failed",
                    "error": f"{type(e).__name__}: {e}",

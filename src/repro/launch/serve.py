@@ -30,19 +30,36 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     # observability: --stats prints the decode step meter (EMA step time,
     # tok/s); --trace DIR writes DIR/trace.json with prefill + per-decode-
-    # step spans (Perfetto-loadable). Both block per decode step to time it.
+    # step spans and a tok/s counter track (Perfetto-loadable); --telemetry
+    # DIR streams DIR/telemetry.jsonl (one step record per decode step) and
+    # watches the decode step times for sustained drift
+    # (obs.detect step_time_drift — the decode path has no bucket model).
+    # All of them block per decode step to time it.
     ap.add_argument("--stats", action="store_true")
     ap.add_argument("--trace", default=None, metavar="DIR")
+    ap.add_argument("--telemetry", default=None, metavar="DIR")
     args = ap.parse_args()
 
-    meter = tracer = None
-    if args.stats or args.trace:
+    meter = tracer = telem = monitor = None
+    if args.stats or args.trace or args.telemetry:
         from repro.obs import meter as obs_meter
         from repro.obs import trace as obs_trace
         meter = obs_meter.StepMeter()
         if args.trace:
             tracer = obs_trace.TraceWriter()
             tracer.name_process(0, "serve")
+        if args.telemetry:
+            from repro.obs import detect as obs_detect
+            from repro.obs import telemetry as obs_telemetry
+            os.makedirs(args.telemetry, exist_ok=True)
+            telem = obs_telemetry.TelemetryWriter(
+                os.path.join(args.telemetry, "telemetry.jsonl"),
+                run_info={"source": "serve", "arch": args.arch,
+                          "batch": args.batch,
+                          "new_tokens": args.new_tokens},
+                sample_every=0)   # no bucket replay on the decode path
+            monitor = obs_detect.HealthMonitor(
+                config=obs_detect.DetectorConfig.wallclock())
 
     cfg = registry.get_smoke_config(args.arch)
     model = Model(cfg)
@@ -50,7 +67,7 @@ def main():
     eng = Engine(model, params, EngineConfig(
         max_seq=args.prompt_len + args.new_tokens + 8,
         temperature=args.temperature, long_context=args.long_context),
-        meter=meter, tracer=tracer)
+        meter=meter, tracer=tracer, telemetry=telem, monitor=monitor)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab,
@@ -68,6 +85,15 @@ def main():
           f"({total_new / dt:.1f} tok/s batched on CPU, reduced config)")
     if args.stats and meter is not None and meter.steps:
         print(f"decode {meter.summary()}")
+    if telem is not None:
+        telem.close()
+        print(f"telemetry: {telem.path} ({telem.n_records} records)")
+        if monitor.alarms:
+            print(f"health: {len(monitor.alarms)} alarm(s)")
+            for a in monitor.alarms:
+                print(f"  {a.describe()}")
+        else:
+            print("health: no alarms")
     if tracer is not None:
         os.makedirs(args.trace, exist_ok=True)
         path = tracer.write(os.path.join(args.trace, "trace.json"))

@@ -80,6 +80,20 @@ def main():
     # Both block on every step's result to time it (small overhead).
     ap.add_argument("--stats", action="store_true")
     ap.add_argument("--trace", default=None, metavar="DIR")
+    # streaming telemetry + online health monitor (repro.obs.telemetry /
+    # repro.obs.detect): --telemetry DIR leaves a schema-versioned JSONL
+    # (DIR/telemetry.jsonl — step time, tok/s, modeled exposed-comm share,
+    # sampled per-bucket reduce times) and watches the run for sustained
+    # measured-vs-modeled drift (straggler / link_degraded /
+    # step_time_drift alarms, also surfaced in the post-run table). The
+    # per-bucket replay runs BETWEEN steps every --telemetry-sample steps
+    # (default 25, 0 disables it), so the hot step path is never perturbed
+    # beyond the same per-step blocking --stats already does.
+    ap.add_argument("--telemetry", default=None, metavar="DIR")
+    ap.add_argument("--telemetry-sample", type=int, default=None,
+                    metavar="N",
+                    help="bucket-replay sampling period in steps for "
+                         "--telemetry (default 25; 0 disables the replay)")
     args = ap.parse_args()
 
     cfg = (registry.get_smoke_config(args.arch) if args.smoke
@@ -119,7 +133,7 @@ def main():
                                global_batch=args.batch, seed=args.seed)
 
     meter = tracer = None
-    if args.stats or args.trace:
+    if args.stats or args.trace or args.telemetry:
         from repro.obs import meter as obs_meter
         from repro.obs import trace as obs_trace
         meter = obs_meter.StepMeter(tokens_per_step=args.batch * args.seq)
@@ -127,6 +141,37 @@ def main():
             tracer = obs_trace.TraceWriter()
             tracer.name_process(0, "measured")
             tracer.name_thread(0, 0, "train steps")
+
+    telem = monitor = timer = tel_engine = None
+    t_model_tel: list = []
+    n_micro = max(args.microbatches, 1)
+    if args.telemetry:
+        from repro.core import simulator as sim_lib
+        from repro.obs import detect as obs_detect
+        from repro.obs import telemetry as obs_telemetry
+        os.makedirs(args.telemetry, exist_ok=True)
+        sample_every = (obs_telemetry.DEFAULT_SAMPLE_EVERY
+                        if args.telemetry_sample is None
+                        else args.telemetry_sample)
+        telem = obs_telemetry.TelemetryWriter(
+            os.path.join(args.telemetry, "telemetry.jsonl"),
+            run_info={"source": "train", "arch": cfg.name,
+                      "comm": args.comm, "wire": args.wire,
+                      "mesh": dict(mesh.shape), "batch": args.batch,
+                      "seq": args.seq, "steps": args.steps},
+            sample_every=sample_every)
+        # live detection runs on the de-tuned wall-clock preset: CPU step
+        # times jitter far more than the simulator's episodes
+        wcfg = obs_detect.DetectorConfig.wallclock()
+        if args.comm == "mlsl":
+            tel_engine = tr.make_comm_engine(model, mesh, planner, comm)
+            monitor = obs_detect.HealthMonitor.from_plan(tel_engine.plan,
+                                                         config=wcfg)
+            t_model_tel = list(monitor.t_model)
+        else:
+            # gspmd's reductions are partitioner-inserted, not bucket
+            # messages: only the generic step_time_drift alarm is reachable
+            monitor = obs_detect.HealthMonitor(config=wcfg)
 
     with compat.set_mesh(mesh):
         state = tr.make_train_state(model, optimizer,
@@ -161,6 +206,40 @@ def main():
                     jax.block_until_ready(metrics)
                 meter.update(loss=float(metrics["loss"]),
                              grad_norm=float(metrics["grad_norm"]))
+                if t_model_tel:
+                    # modeled exposed-comm share at the CURRENT measured
+                    # compute scale (pure host math, a few buckets)
+                    meter.exposed_comm_model = \
+                        sim_lib.simulate_bucket_schedule(
+                            t_model_tel, n_micro,
+                            meter.step_time / n_micro,
+                            overlap=comm.overlap).exposed_comm
+                exposed = meter.exposed_comm_frac
+                if tracer is not None:
+                    vals = {"tokens_per_sec": meter.tokens_per_sec}
+                    if exposed is not None:
+                        vals["exposed_comm_share"] = exposed
+                    tracer.counter("rates", tracer.now_us(), vals)
+                if telem is not None:
+                    telem.step(step=s, t_step_s=meter.last_dt,
+                               tok_s=meter.tokens_per_sec,
+                               loss=meter.last_loss, exposed_frac=exposed)
+                    fired = monitor.observe_step(s, meter.last_dt,
+                                                 exposed_frac=exposed)
+                    if tel_engine is not None and telem.should_sample(s):
+                        # sampled standalone replay BETWEEN steps — the hot
+                        # path never runs it; first sample pays the compile
+                        if timer is None:
+                            timer = tel_engine.bucket_timer(mesh)
+                            sampled = timer.sample(warmup=1)
+                        else:
+                            sampled = timer.sample()
+                        telem.bucket_times(s, sampled, modeled=t_model_tel)
+                        fired += monitor.observe_bucket_times(s, sampled)
+                    for a in fired:
+                        telem.alarm(step=a.step, kind=a.kind,
+                                    factor=a.factor, level=a.level,
+                                    rank=a.rank, detail=a.detail)
             else:
                 state, metrics = step_fn(state, batch)
             if s % args.log_every == 0 or s == args.steps - 1:
@@ -171,16 +250,33 @@ def main():
                     print(f"step {s:5d} loss {float(metrics['loss']):.4f} "
                           f"gnorm {float(metrics['grad_norm']):.3f} "
                           f"({time.time() - t0:.1f}s)", flush=True)
-        if meter is not None or tracer is not None:
+        if args.stats or tracer is not None:
             _emit_observability(args, mesh, planner, comm, model, meter,
-                                tracer)
+                                tracer, engine=tel_engine)
+        if telem is not None:
+            telem.close()
+            print(f"telemetry: {telem.path} ({telem.n_records} records)")
+            _report_health(monitor)
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, {"params": state.params}, step=args.steps)
         print(f"checkpoint -> {args.ckpt_dir}")
     return 0
 
 
-def _emit_observability(args, mesh, planner, comm, model, meter, tracer):
+def _report_health(monitor) -> None:
+    """Post-run alarm table for --telemetry (the operator's summary)."""
+    if not monitor.alarms:
+        print("health: no alarms")
+        return
+    print(f"health: {len(monitor.alarms)} alarm(s)")
+    for a in monitor.alarms:
+        print(f"  {a.describe()}")
+        if monitor.bucket_bytes:
+            print(f"    -> {monitor.reroute(a).summary()}")
+
+
+def _emit_observability(args, mesh, planner, comm, model, meter, tracer,
+                        engine=None):
     """Post-run stats/trace emission (--stats / --trace).
 
     For the mlsl data path: replay each bucket's exchange standalone to get
@@ -196,7 +292,8 @@ def _emit_observability(args, mesh, planner, comm, model, meter, tracer):
 
     st = None
     if args.comm == "mlsl":
-        engine = tr.make_comm_engine(model, mesh, planner, comm)
+        if engine is None:
+            engine = tr.make_comm_engine(model, mesh, planner, comm)
         measured = obs_stats.measure_bucket_times(engine, mesh, iters=2)
         st = engine.stats(measured=measured)
         if tracer is not None:

@@ -337,77 +337,103 @@ class CommStats:
 # measured per-bucket service time (the engine's own data path, replayed)
 # ---------------------------------------------------------------------------
 
+class BucketTimer:
+    """Compile-once, sample-many per-bucket replay of the engine data path.
+
+    Each bucket's exchange runs standalone: the fused flat message (or
+    per-leaf messages for non-fusable buckets) is reduced in its own jitted
+    shard_map region over the plan's axes, exactly the branch
+    ``reduce_chained`` takes for that bucket. Synthetic inputs — the wire
+    traffic and kernel work are what is being measured, not the values.
+
+    Building the jitted closures is the expensive part (tracing + compile),
+    so it happens ONCE here; ``sample()`` is then cheap enough for the
+    telemetry loop to call every N steps between training steps (the first
+    ``sample`` still pays each bucket's compile — pass ``warmup >= 1`` on
+    that call, as ``measure_bucket_times`` does, or discard it).
+    """
+
+    def __init__(self, engine, mesh, *, seed: int = 0):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+
+        p = engine.plan
+        rng = np.random.default_rng(seed)
+        bspec = p.data_axes if len(p.data_axes) > 1 else p.data_axes[0]
+        manual = set(p.data_axes) | ({p.tp_axis} if p.tp_axis else set())
+        residuals = engine.init_residuals()
+        self.n_buckets = p.n_buckets
+        self._cases = []          # (jitted_fn, args) or None for skip_reduce
+        for bi, bucket in enumerate(p.buckets.buckets):
+            if p.skip_reduce:
+                self._cases.append(None)
+                continue
+            if p.fusable[bi]:
+                flat = jnp.asarray(
+                    rng.standard_normal(bucket.n_elems), jnp.float32)
+                if engine.ef_applied(bi):
+                    fn = compat.shard_map(
+                        lambda f, r, _bi=bi:
+                            engine._reduce_bucket(f, r, _bi)[0],
+                        mesh=mesh, in_specs=(P(), P(bspec)), out_specs=P(),
+                        axis_names=manual, check_vma=False)
+                    args = (flat, residuals[bi])
+                else:
+                    fn = compat.shard_map(
+                        lambda f, _bi=bi:
+                            engine._reduce_bucket(f, None, _bi)[0],
+                        mesh=mesh, in_specs=(P(),), out_specs=P(),
+                        axis_names=manual, check_vma=False)
+                    args = (flat,)
+            else:
+                vals = tuple(
+                    jnp.asarray(rng.standard_normal(shape), jnp.float32)
+                    for shape in bucket.shapes)
+                wire = cl.WIRE_BF16 if p.wire == cl.WIRE_INT8 else p.wire
+                axes = p.axes_for(bi)
+
+                def leafwise(*vs, _axes=axes, _wire=wire):
+                    return tuple(
+                        cl.allreduce(v, _axes, wire=_wire, mean=True)
+                        for v in vs)
+
+                fn = compat.shard_map(
+                    leafwise, mesh=mesh,
+                    in_specs=tuple(P() for _ in vals),
+                    out_specs=tuple(P() for _ in vals),
+                    axis_names=manual, check_vma=False)
+                args = vals
+            self._cases.append((jax.jit(fn), args))
+
+    def sample(self, *, iters: int = 1, warmup: int = 0) -> tuple:
+        """Median wall seconds per bucket over `iters` timed replays."""
+        import jax
+
+        times = []
+        for case in self._cases:
+            if case is None:
+                times.append(0.0)
+                continue
+            jf, args = case
+            for _ in range(warmup):
+                jax.block_until_ready(jf(*args))
+            ts = []
+            for _ in range(max(iters, 1)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(jf(*args))
+                ts.append(time.perf_counter() - t0)
+            ts.sort()
+            times.append(ts[len(ts) // 2])
+        return tuple(times)
+
+
 def measure_bucket_times(engine, mesh, *, iters: int = 3, warmup: int = 1,
                          seed: int = 0) -> tuple:
-    """Median wall seconds per bucket of the engine's `_reduce_bucket` path.
-
-    Each bucket's exchange is replayed standalone: the fused flat message
-    (or per-leaf messages for non-fusable buckets) is reduced in its own
-    jitted shard_map region over the plan's axes, exactly the branch
-    `reduce_chained` takes for that bucket. Synthetic inputs — the wire
-    traffic and kernel work are what is being measured, not the values.
-    """
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-    from jax.sharding import PartitionSpec as P
-
-    from repro import compat
-
-    p = engine.plan
-    rng = np.random.default_rng(seed)
-    bspec = p.data_axes if len(p.data_axes) > 1 else p.data_axes[0]
-    manual = set(p.data_axes) | ({p.tp_axis} if p.tp_axis else set())
-    residuals = engine.init_residuals()
-
-    def timed(fn, args) -> float:
-        jf = jax.jit(fn)
-        for _ in range(warmup):
-            jax.block_until_ready(jf(*args))
-        ts = []
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            jax.block_until_ready(jf(*args))
-            ts.append(time.perf_counter() - t0)
-        ts.sort()
-        return ts[len(ts) // 2]
-
-    times = []
-    for bi, bucket in enumerate(p.buckets.buckets):
-        if p.skip_reduce:
-            times.append(0.0)
-            continue
-        if p.fusable[bi]:
-            flat = jnp.asarray(
-                rng.standard_normal(bucket.n_elems), jnp.float32)
-            if engine.ef_applied(bi):
-                fn = compat.shard_map(
-                    lambda f, r, _bi=bi: engine._reduce_bucket(f, r, _bi)[0],
-                    mesh=mesh, in_specs=(P(), P(bspec)), out_specs=P(),
-                    axis_names=manual, check_vma=False)
-                args = (flat, residuals[bi])
-            else:
-                fn = compat.shard_map(
-                    lambda f, _bi=bi: engine._reduce_bucket(f, None, _bi)[0],
-                    mesh=mesh, in_specs=(P(),), out_specs=P(),
-                    axis_names=manual, check_vma=False)
-                args = (flat,)
-        else:
-            vals = tuple(
-                jnp.asarray(rng.standard_normal(shape), jnp.float32)
-                for shape in bucket.shapes)
-            wire = cl.WIRE_BF16 if p.wire == cl.WIRE_INT8 else p.wire
-            axes = p.axes_for(bi)
-
-            def leafwise(*vs, _axes=axes, _wire=wire):
-                return tuple(cl.allreduce(v, _axes, wire=_wire, mean=True)
-                             for v in vs)
-
-            fn = compat.shard_map(
-                leafwise, mesh=mesh,
-                in_specs=tuple(P() for _ in vals),
-                out_specs=tuple(P() for _ in vals),
-                axis_names=manual, check_vma=False)
-            args = vals
-        times.append(timed(fn, args))
-    return tuple(times)
+    """Median wall seconds per bucket of the engine's `_reduce_bucket` path
+    (one-shot convenience over ``BucketTimer``)."""
+    return BucketTimer(engine, mesh, seed=seed).sample(
+        iters=iters, warmup=warmup)

@@ -73,6 +73,16 @@ class TraceWriter:
             ev["args"] = args
         self.events.append(ev)
 
+    def counter(self, name: str, ts_us: float, values: dict, *,
+                pid: int = 0, tid: int = 0) -> None:
+        """One counter ("C") sample: Perfetto renders each key of `values`
+        as a series on the `name` counter track — e.g.
+        ``counter("rates", ts, {"tokens_per_sec": 1.2e4})`` gives the rate
+        timeline next to the span rows. Values must be numeric."""
+        self.events.append({"name": name, "ph": "C", "ts": float(ts_us),
+                            "pid": pid, "tid": tid,
+                            "args": {k: float(v) for k, v in values.items()}})
+
     def instant(self, name: str, ts_us: float, *, pid: int = 0,
                 tid: int = 0, cat: str = "") -> None:
         ev = {"name": name, "ph": "i", "ts": float(ts_us), "s": "t",
@@ -174,8 +184,8 @@ def load_trace(path: str) -> dict:
 def validate_trace(obj) -> None:
     """Raise ValueError unless `obj` is a well-formed Chrome trace object:
     a JSON object whose ``traceEvents`` is a list of events with the
-    required phase fields, non-negative "X" durations, and balanced "B"/"E"
-    pairs per (pid, tid) track."""
+    required phase fields, non-negative "X" durations, numeric-valued "C"
+    counter samples, and balanced "B"/"E" pairs per (pid, tid) track."""
     if not isinstance(obj, dict) or not isinstance(
             obj.get("traceEvents"), list):
         raise ValueError("trace must be an object with a traceEvents list")
@@ -192,6 +202,13 @@ def validate_trace(obj) -> None:
         if ph == "X":
             if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
                 raise ValueError(f"X event needs dur >= 0: {ev!r}")
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or not all(
+                    isinstance(v, (int, float)) and not isinstance(v, bool)
+                    for v in args.values()):
+                raise ValueError(
+                    f"C event needs numeric args series: {ev!r}")
         elif ph == "B":
             depth[key] = depth.get(key, 0) + 1
         elif ph == "E":

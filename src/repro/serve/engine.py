@@ -28,16 +28,23 @@ class EngineConfig:
 
 class Engine:
     def __init__(self, model: Model, params, cfg: EngineConfig | None = None,
-                 *, meter=None, tracer=None):
+                 *, meter=None, tracer=None, telemetry=None, monitor=None):
         """`meter` (obs.meter.StepMeter) / `tracer` (obs.trace.TraceWriter)
         optionally instrument the host loop: a "prefill" span plus one span
-        and one meter step per decode step. Instrumentation blocks on each
-        step's result to time it — leave both None on the fast path."""
+        and one meter step per decode step. `telemetry`
+        (obs.telemetry.TelemetryWriter) streams one step record per decode
+        step, and `monitor` (obs.detect.HealthMonitor) watches the decode
+        step times for sustained drift (a step-only stream: only the generic
+        step_time_drift alarm is reachable — there is no bucket model on the
+        decode path). All of them need the per-step blocking `meter`
+        provides — leave everything None on the fast path."""
         self.model = model
         self.params = params
         self.cfg = cfg or EngineConfig()
         self.meter = meter
         self.tracer = tracer
+        self.telemetry = telemetry
+        self.monitor = monitor
         ctx_kw = {}
         if self.cfg.long_context and model.cfg.arch_type in ("dense", "moe",
                                                              "vlm"):
@@ -94,6 +101,19 @@ class Engine:
                     jax.block_until_ready(tok)
             if self.meter is not None:
                 self.meter.update(tokens=B)
+                if self.telemetry is not None:
+                    self.telemetry.step(step=i, t_step_s=self.meter.last_dt,
+                                        tok_s=self.meter.tokens_per_sec)
+                if self.tracer is not None:
+                    self.tracer.counter(
+                        "rates", self.tracer.now_us(),
+                        {"tokens_per_sec": self.meter.tokens_per_sec})
+                if self.monitor is not None:
+                    for a in self.monitor.observe_step(i, self.meter.last_dt):
+                        if self.telemetry is not None:
+                            self.telemetry.alarm(
+                                step=a.step, kind=a.kind, factor=a.factor,
+                                level=a.level, rank=a.rank, detail=a.detail)
         return np.stack(out, axis=1)
 
 

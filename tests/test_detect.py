@@ -1,0 +1,367 @@
+"""Telemetry channel + online health monitor (repro.obs.telemetry/detect).
+
+The PR-10 acceptance claims verified here:
+
+  * the JSONL telemetry stream round-trips through write/load/validate,
+    malformed streams are rejected, and the simulator's labeled episode
+    generator emits schema-compliant events;
+  * the detector fires the RIGHT typed alarm on each PR-6 fault scenario
+    (straggler, degraded-inter, hetero links, congested intra, step drift
+    with sampling off) with the estimated degradation factor within
+    tolerance of the injected one;
+  * ZERO false positives on clean deterministic episodes, and warm-up
+    steps never alarm;
+  * alarm factors map into ``Topology.degrade`` convention and the reroute
+    hook reports bucket-routing changes for link faults.
+"""
+
+import pytest
+
+from repro.core import engine as eng
+from repro.core import hier, hw, planner
+from repro.core import simulator as sim
+from repro.obs import detect, telemetry
+
+DATA_AXES = (hier.NODE_AXIS, hier.LOCAL_AXIS)
+
+BUCKET_BYTES = (25e6, 25e6, 25e6, 12e6, 4e6, 1e6, 0.25e6)
+VIRT = "cloud-virtio-sriov"
+
+
+def _routed_algos(nodes=16, topo_name=VIRT):
+    topo = hw.TOPOLOGIES[topo_name]
+    return tuple(planner.choose_allreduce_algo(b, nodes, topo)
+                 for b in BUCKET_BYTES)
+
+
+def _replay(spec, algos=None):
+    algos = algos or _routed_algos(spec.nodes, spec.topo_name)
+    events = sim.generate_episode(spec, BUCKET_BYTES, algos)
+    telemetry.validate_telemetry(events)
+    mon = detect.HealthMonitor(bucket_bytes=BUCKET_BYTES, algos=algos,
+                               nodes=spec.nodes, topo=spec.topo_name)
+    mon.replay(events)
+    return mon
+
+
+# --------------------------------------------------------------------------
+# telemetry channel
+# --------------------------------------------------------------------------
+
+def test_telemetry_round_trip(tmp_path):
+    path = str(tmp_path / "telemetry.jsonl")
+    with telemetry.TelemetryWriter(path, run_info={"arch": "yi-6b"},
+                                   sample_every=5) as tel:
+        tel.step(step=0, t_step_s=0.5, tok_s=1e4, loss=3.2,
+                 exposed_frac=0.1)
+        tel.bucket_times(0, [1e-3, 2e-3], modeled=[1.1e-3, 1.9e-3])
+        tel.alarm(step=7, kind="straggler", factor=1.5, detail="test")
+    events = telemetry.load_telemetry(path)
+    kinds = [e["kind"] for e in events]
+    assert kinds == ["meta", "step", "bucket_times", "alarm"]
+    assert events[0]["schema_version"] == telemetry.SCHEMA_VERSION
+    assert events[0]["run"]["arch"] == "yi-6b"
+    assert events[1]["t_step_s"] == 0.5 and events[1]["loss"] == 3.2
+    assert events[2]["measured"] == [1e-3, 2e-3]
+    assert events[3]["alarm"]["kind"] == "straggler"
+    assert events[3]["alarm"]["factor"] == 1.5
+
+
+def test_telemetry_sampling_knob(tmp_path):
+    tel = telemetry.TelemetryWriter(str(tmp_path / "t.jsonl"),
+                                    sample_every=25)
+    assert tel.should_sample(0) and tel.should_sample(50)
+    assert not tel.should_sample(26)
+    tel.close()
+    off = telemetry.TelemetryWriter(str(tmp_path / "t0.jsonl"),
+                                    sample_every=0)
+    assert not any(off.should_sample(s) for s in range(100))
+    off.close()
+
+
+def test_validate_telemetry_rejects_malformed():
+    meta = {"kind": "meta", "schema_version": 1, "created_unix": 0.0,
+            "sample_every": 25, "run": {}}
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry([])                       # no meta
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry([{"kind": "step", "step": 0,
+                                       "t_step_s": 1.0}])      # meta not 1st
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry([meta, meta])             # dup meta
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry(
+            [meta, {"kind": "wat", "step": 0}])                # unknown kind
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry(
+            [meta, {"kind": "step", "step": 0}])               # no t_step_s
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry(
+            [meta, {"kind": "bucket_times", "step": 0}])       # no columns
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry(
+            [meta, {"kind": "bucket_times", "step": 0,
+                    "measured": [-1.0]}])                      # negative
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry(
+            [meta, {"kind": "alarm", "step": 0,
+                    "alarm": {"kind": "straggler"}}])          # no factor
+    with pytest.raises(ValueError):
+        telemetry.validate_telemetry(
+            [{**meta, "schema_version": 99}, ])                # future ver
+
+
+def test_bucket_times_requires_a_column(tmp_path):
+    tel = telemetry.TelemetryWriter(str(tmp_path / "t.jsonl"))
+    with pytest.raises(ValueError):
+        tel.bucket_times(0)
+    tel.close()
+
+
+# --------------------------------------------------------------------------
+# clean runs: no alarms, warm-up never alarms
+# --------------------------------------------------------------------------
+
+def test_clean_episode_zero_alarms():
+    mon = _replay(sim.EpisodeSpec(name="clean", label="clean"))
+    assert mon.alarms == []
+
+
+def test_clean_hier_episode_zero_alarms():
+    mon = _replay(sim.EpisodeSpec(name="clean_hier", label="clean", seed=1),
+                  algos=tuple("hier" for _ in BUCKET_BYTES))
+    assert mon.alarms == []
+
+
+def test_warmup_never_alarms():
+    """Even violent drift during calibration cannot fire: the first
+    warmup_steps observations only build the baseline."""
+    cfg = detect.DetectorConfig(warmup_steps=10)
+    mon = detect.HealthMonitor(bucket_bytes=BUCKET_BYTES,
+                               algos=_routed_algos(), nodes=16, topo=VIRT,
+                               config=cfg)
+    for s in range(cfg.warmup_steps):
+        # wildly varying times while calibrating
+        assert mon.observe_step(s, 1.0 + (s % 3)) == []
+        assert mon.observe_bucket_times(s, [1e-3 * (s + 1)] * 7) == []
+    assert mon.alarms == []
+    assert not mon.in_warmup
+
+
+def test_fault_from_step_zero_never_alarms():
+    """A fault active from step 0 becomes the baseline — the monitor
+    detects CHANGE, not absolute badness, so it must stay silent."""
+    spec = sim.EpisodeSpec(name="always_slow", label="clean",
+                           fault=sim.FaultSpec(straggler_slowdown=2.0),
+                           onset=0, seed=9)
+    mon = _replay(spec)
+    assert mon.alarms == []
+
+
+# --------------------------------------------------------------------------
+# typed alarms on PR-6 fault scenarios
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("slowdown", [1.5, 2.0])
+def test_straggler_detected_with_factor(slowdown):
+    spec = sim.EpisodeSpec(name="straggler", label="straggler",
+                           fault=sim.FaultSpec(straggler_slowdown=slowdown),
+                           seed=2)
+    mon = _replay(spec)
+    assert len(mon.alarms) == 1
+    a = mon.alarms[0]
+    assert a.kind == detect.ALARM_STRAGGLER
+    assert a.step >= spec.onset
+    assert a.factor == pytest.approx(slowdown, rel=0.25)
+    assert abs(a.factor - slowdown) < 0.15
+    assert a.degrade_kwargs() == {"straggler": a.factor}
+
+
+@pytest.mark.parametrize("bw_factor", [0.4, 0.6])
+def test_degraded_inter_detected_with_factor(bw_factor):
+    spec = sim.EpisodeSpec(name="deg_inter", label="link_degraded",
+                           level="inter",
+                           fault=sim.FaultSpec(inter_bw_factor=bw_factor),
+                           seed=4)
+    mon = _replay(spec)
+    assert len(mon.alarms) == 1
+    a = mon.alarms[0]
+    assert a.kind == detect.ALARM_LINK_DEGRADED and a.level == "inter"
+    assert a.step >= spec.onset
+    assert abs(a.factor - bw_factor) <= 0.1
+    assert a.degrade_kwargs() == {"inter_bw": a.factor}
+
+
+def test_hetero_links_detected_as_worst_inter():
+    fault = sim.FaultSpec(hetero_link_bw_factors=(1.0, 0.6, 0.9))
+    spec = sim.EpisodeSpec(name="hetero", label="link_degraded",
+                           level="inter", fault=fault, seed=6)
+    mon = _replay(spec)
+    assert len(mon.alarms) == 1
+    a = mon.alarms[0]
+    assert a.kind == detect.ALARM_LINK_DEGRADED and a.level == "inter"
+    # the detector sees the critical path: the WORST link's factor
+    assert abs(a.factor - fault.worst_inter_bw_factor) <= 0.1
+
+
+def test_congested_intra_detected_on_hier_plan():
+    """Intra-vs-inter discrimination: on an all-hier cloud-virtio plan the
+    intra legs carry the bulk of the volume, so an intra fault's per-bucket
+    drift signature cannot be mimicked by any inter hypothesis."""
+    spec = sim.EpisodeSpec(name="intra", label="link_degraded",
+                           level="intra",
+                           fault=sim.FaultSpec(intra_bw_factor=0.25),
+                           seed=7)
+    mon = _replay(spec, algos=tuple("hier" for _ in BUCKET_BYTES))
+    assert len(mon.alarms) == 1
+    a = mon.alarms[0]
+    assert a.kind == detect.ALARM_LINK_DEGRADED and a.level == "intra"
+    assert abs(a.factor - 0.25) <= 0.1
+    assert a.degrade_kwargs() == {"intra_bw": a.factor}
+
+
+def test_step_drift_fallback_without_sampling():
+    """Bucket replay disabled (sample_every=0): only the generic
+    step_time_drift alarm is reachable, and it must still fire."""
+    spec = sim.EpisodeSpec(name="drift", label="step_time_drift",
+                           fault=sim.FaultSpec(straggler_slowdown=1.8),
+                           sample_every=0, seed=8)
+    mon = _replay(spec)
+    assert len(mon.alarms) == 1
+    a = mon.alarms[0]
+    assert a.kind == detect.ALARM_STEP_DRIFT
+    assert a.factor > 1.2
+    assert a.degrade_kwargs() == {"straggler": a.factor}
+
+
+def test_link_fault_not_misread_as_straggler():
+    """A link fault also drifts step time; with bucket sampling on, the
+    monitor must classify at the bucket stream and never cry straggler."""
+    spec = sim.EpisodeSpec(name="deg", label="link_degraded", level="inter",
+                           fault=sim.FaultSpec(inter_bw_factor=0.4), seed=4)
+    mon = _replay(spec)
+    assert all(a.kind != detect.ALARM_STRAGGLER for a in mon.alarms)
+
+
+# --------------------------------------------------------------------------
+# reaction hook: factor -> Topology.degrade -> re-route report
+# --------------------------------------------------------------------------
+
+def test_reroute_report_for_degraded_inter():
+    spec = sim.EpisodeSpec(name="deg", label="link_degraded", level="inter",
+                           fault=sim.FaultSpec(inter_bw_factor=0.4), seed=4)
+    mon = _replay(spec)
+    rep = mon.reroute(mon.alarms[0])
+    # cloud-virtio routes bulk flat on the healthy fabric; a degraded
+    # fabric flips bulk buckets to two-level — the report must say so
+    assert rep.n_changed > 0
+    assert "re-route" in rep.summary()
+    assert rep.topo_name == VIRT
+    # the re-routed plan is what the router itself would choose on the
+    # degraded topology
+    deg = hw.TOPOLOGIES[VIRT].degrade(**mon.alarms[0].degrade_kwargs())
+    expect = tuple(planner.choose_allreduce_algo(b, 16, deg)
+                   for b in BUCKET_BYTES)
+    assert rep.new_algos == expect
+
+
+def test_reroute_report_straggler_is_stable():
+    spec = sim.EpisodeSpec(name="st", label="straggler",
+                           fault=sim.FaultSpec(straggler_slowdown=2.0),
+                           seed=3)
+    mon = _replay(spec)
+    rep = mon.reroute(mon.alarms[0])
+    # compute slowdown does not change link routing
+    assert rep.n_changed == 0
+    assert "unchanged" in rep.summary()
+
+
+# --------------------------------------------------------------------------
+# monitor construction / misc behavior
+# --------------------------------------------------------------------------
+
+def test_from_plan_mesh8(mesh8):
+    import jax
+
+    def _tree():
+        k = jax.random.PRNGKey(3)
+        return {"embed": jax.random.normal(k, (32, 8)),
+                "w": jax.random.normal(jax.random.fold_in(k, 1), (64, 16))}
+
+    comm = eng.CommConfig(mode="mlsl", wire="int8", hier=True,
+                          topo="xeon-shm-10gbe")
+    plan = eng.build_plan(_tree(), comm, mesh8, DATA_AXES)
+    mon = detect.HealthMonitor.from_plan(plan)
+    assert len(mon.t_model) == plan.n_buckets
+    assert all(t > 0 for t in mon.t_model)
+    assert mon.topo.name == "xeon-shm-10gbe"
+    # replaying the model's own bucket times as "measured" stays silent
+    for s in range(40):
+        mon.observe_step(s, 0.5)
+        if s % 5 == 0:
+            mon.observe_bucket_times(s, list(mon.t_model))
+    assert mon.alarms == []
+
+
+def test_step_only_monitor_drift():
+    """No bucket model at all (gspmd / serve decode): step drift still
+    detected, and only the generic kind fires."""
+    cfg = detect.DetectorConfig()
+    mon = detect.HealthMonitor(config=cfg)
+    for s in range(cfg.warmup_steps):
+        mon.observe_step(s, 0.5)
+    fired = []
+    for s in range(cfg.warmup_steps, cfg.warmup_steps + 10):
+        fired += mon.observe_step(s, 1.0)
+    assert len(fired) == 1 and fired[0].kind == detect.ALARM_STEP_DRIFT
+    # recovery re-arms: back to baseline, then drift again -> a second alarm
+    for s in range(30, 40):
+        mon.observe_step(s, 0.5)
+    fired2 = []
+    for s in range(40, 50):
+        fired2 += mon.observe_step(s, 1.0)
+    assert len(fired2) == 1
+
+
+def test_bucket_length_mismatch_ignored():
+    mon = detect.HealthMonitor(bucket_bytes=BUCKET_BYTES,
+                               algos=_routed_algos(), nodes=16, topo=VIRT)
+    assert mon.observe_bucket_times(0, [1e-3, 2e-3]) == []
+
+
+def test_wallclock_preset_is_looser():
+    base, wc = detect.DetectorConfig(), detect.DetectorConfig.wallclock()
+    assert wc.step_rel_threshold > base.step_rel_threshold
+    assert wc.bucket_rel_threshold > base.bucket_rel_threshold
+    assert wc.scale_floor > base.scale_floor
+    assert wc.step_sustain >= base.step_sustain
+
+
+def test_episode_true_factor_labels():
+    F = sim.FaultSpec
+    assert sim.EpisodeSpec(name="c", label="clean").true_factor == 1.0
+    assert sim.EpisodeSpec(
+        name="s", label="straggler",
+        fault=F(straggler_slowdown=1.5)).true_factor == 1.5
+    assert sim.EpisodeSpec(
+        name="i", label="link_degraded", level="inter",
+        fault=F(inter_bw_factor=0.4)).true_factor == 0.4
+    assert sim.EpisodeSpec(
+        name="a", label="link_degraded", level="intra",
+        fault=F(intra_bw_factor=0.25)).true_factor == 0.25
+    assert sim.EpisodeSpec(
+        name="h", label="link_degraded", level="inter",
+        fault=F(hetero_link_bw_factors=(1.0, 0.6, 0.9))).true_factor == 0.6
+
+
+def test_episode_events_deterministic():
+    """Same spec -> bit-identical event stream (the LCG jitter carries no
+    platform or library dependence) — the property the gated bench rests
+    on."""
+    spec = sim.EpisodeSpec(name="d", label="straggler",
+                           fault=sim.FaultSpec(straggler_slowdown=1.5),
+                           seed=2)
+    algos = _routed_algos()
+    a = sim.generate_episode(spec, BUCKET_BYTES, algos)
+    b = sim.generate_episode(spec, BUCKET_BYTES, algos)
+    assert a == b

@@ -93,6 +93,29 @@ def test_validate_trace_rejects_malformed():
             {"traceEvents": [{"ph": "B", "name": "a", "ts": 0.0}]})  # no E
 
 
+def test_trace_counter_round_trip(tmp_path):
+    """Counter ("C") events — the tok/s / exposed-share rate tracks — write,
+    load, and validate; malformed counters are rejected."""
+    w = obs_trace.TraceWriter()
+    w.counter("rates", 10.0, {"tokens_per_sec": 123.0,
+                              "exposed_comm_share": 0.25})
+    w.counter("rates", 20.0, {"tokens_per_sec": 130.0,
+                              "exposed_comm_share": 0.20})
+    path = w.write(str(tmp_path / "trace.json"))
+    obj = obs_trace.load_trace(path)
+    cs = [e for e in obj["traceEvents"] if e["ph"] == "C"]
+    assert len(cs) == 2
+    assert cs[0]["args"]["tokens_per_sec"] == 123.0
+    assert cs[1]["args"]["exposed_comm_share"] == 0.20
+    for bad in (
+        {"ph": "C", "name": "r", "ts": 0.0},                    # no args
+        {"ph": "C", "name": "r", "ts": 0.0, "args": {}},        # empty
+        {"ph": "C", "name": "r", "ts": 0.0, "args": {"x": "y"}},  # non-num
+    ):
+        with pytest.raises(ValueError):
+            obs_trace.validate_trace({"traceEvents": [bad]})
+
+
 # --------------------------------------------------------------------------
 # modeled-timeline export
 # --------------------------------------------------------------------------
@@ -240,6 +263,27 @@ def test_measure_bucket_times_smoke(mesh8):
     assert all(t > 0 for t in times)
     st = engine.stats(measured=times)
     assert st.t_measured_total == pytest.approx(sum(times))
+
+
+def test_bucket_timer_compile_once_sample_many(mesh8):
+    """The telemetry loop's sampled replay: BucketTimer compiles each
+    bucket's region once, then repeated sample() calls stay cheap and keep
+    producing a full positive per-bucket vector."""
+    import time as _time
+
+    from repro import compat
+    comm = eng.CommConfig(mode="mlsl", wire="int8", hier=True)
+    engine = eng.CommEngine.create(_tree(), comm, mesh8, DATA_AXES)
+    with compat.set_mesh(mesh8):
+        timer = engine.bucket_timer(mesh8)
+        first = timer.sample(warmup=1)           # pays the compiles
+        t0 = _time.perf_counter()
+        second = timer.sample()
+        resample_s = _time.perf_counter() - t0
+    assert len(first) == len(second) == engine.plan.n_buckets
+    assert all(t > 0 for t in first) and all(t > 0 for t in second)
+    # post-compile sampling must be far below any training-step timescale
+    assert resample_s < 5.0
 
 
 # --------------------------------------------------------------------------
